@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks.
+
+CPU wall times of interpret-mode Pallas are NOT TPU projections — they
+validate the harness and catch pathological regressions; the derived column
+carries the analytic arithmetic intensity that the TPU roofline uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import record, time_fn
+from repro.kernels import ref
+from repro.kernels.ops import attention, fedavg, rwkv6, ssm
+
+
+def run_all():
+    key = jax.random.PRNGKey(0)
+
+    b, s, h, d = 1, 256, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    us = time_fn(lambda: attention(q, k, v, block_q=64, block_k=64))
+    flops = 4 * b * h * s * s * d / 2  # causal
+    bytes_ = (3 * q.size + q.size) * 4
+    record("kernel_flash_attention", us,
+           f"AI={flops/bytes_:.1f} flop/byte (causal {s}x{s}, interpret)")
+    us_ref = time_fn(lambda: ref.flash_attention_ref(q, k, v))
+    record("kernel_flash_attention_ref", us_ref, "pure-jnp oracle")
+
+    b, s, h, d = 1, 128, 2, 64
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, d)) * 0.5
+    kk = jax.random.normal(ks[1], (b, s, h, d)) * 0.5
+    vv = jax.random.normal(ks[2], (b, s, h, d)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, d))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    us = time_fn(lambda: rwkv6(r, kk, vv, w, u, block_t=64))
+    record("kernel_rwkv6_scan", us,
+           f"state={d}x{d} fp32/head, {s} steps (interpret)")
+    us_ref = time_fn(lambda: ref.rwkv6_scan_ref(r, kk, vv, w, u))
+    record("kernel_rwkv6_scan_ref", us_ref, "pure-jnp oracle")
+
+    bsz, sl, din, n = 1, 128, 64, 16
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (bsz, sl, din))
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (bsz, sl, din)))
+    a_log = jax.random.normal(ks[2], (din, n)) * 0.5
+    bb = jax.random.normal(ks[3], (bsz, sl, n))
+    cc = jax.random.normal(ks[4], (bsz, sl, n))
+    dsk = jax.random.normal(ks[5], (din,))
+    us = time_fn(lambda: ssm(x, delta, a_log, bb, cc, dsk, block_t=64,
+                             block_d=64))
+    record("kernel_ssm_scan", us, f"state={din}x{n} fp32 (interpret)")
+
+    t, d, v = 128, 64, 2048
+    ks = jax.random.split(key, 3)
+    h = jax.random.normal(ks[0], (t, d))
+    wv = jax.random.normal(ks[1], (d, v)) * d ** -0.5
+    lab = jax.random.randint(ks[2], (t,), 0, v)
+    from repro.kernels.ops import cross_entropy
+    us = time_fn(lambda: cross_entropy(h, wv, lab, block_t=64, block_v=512))
+    saved = t * v * 4
+    record("kernel_fused_ce", us,
+           f"avoids {saved/1e6:.1f} MB logits materialization (interpret)")
+
+    n_cl, p = 50, 1 << 16
+    ks = jax.random.split(key, 3)
+    g = jax.random.normal(ks[0], (p,))
+    cf = jax.random.normal(ks[1], (n_cl, p))
+    mask = jax.random.bernoulli(ks[2], 0.5, (n_cl,))
+    us = time_fn(lambda: fedavg(g, cf, mask))
+    gbps = (cf.size + g.size) * 4 / (us * 1e-6) / 1e9
+    record("kernel_fedavg_agg", us,
+           f"{n_cl}x{p} merge, {gbps:.2f} GB/s effective (interpret)")

@@ -1,0 +1,15 @@
+"""Benchmark harness — one function per paper table/figure + roofline +
+kernel micro-benches. Prints ``name,us_per_call,derived`` CSV."""
+from benchmarks import kernels_micro, paper_figures, roofline
+from benchmarks.common import header
+
+
+def main() -> None:
+    header()
+    paper_figures.run_all()
+    roofline.run(emit_rows=True)
+    kernels_micro.run_all()
+
+
+if __name__ == '__main__':
+    main()

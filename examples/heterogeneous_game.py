@@ -1,0 +1,57 @@
+"""Beyond-paper example: heterogeneous IoT fleet (battery vs mains nodes).
+
+Half the fleet runs on batteries (high participation cost), half on mains
+power (low cost). The asymmetric game stratifies participation; the uniform
+planner of the paper cannot express that and pays for it.
+
+Run:  PYTHONPATH=src python examples/heterogeneous_game.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as C
+from repro.core.asymmetric import (HeterogeneousGame, best_response_dynamics,
+                                   planner_coordinate_descent,
+                                   verify_equilibrium)
+
+
+def main():
+    n = 14
+    dur = C.theoretical_duration(n_nodes=n, d_inf=35.0, slope=8.0)
+    # mains-powered gateways (cheap) + battery sensors (expensive)
+    costs = jnp.asarray([0.5] * (n // 2) + [9.0] * (n - n // 2))
+    gammas = jnp.full((n,), 0.6)
+    game = HeterogeneousGame(costs=costs, gammas=gammas, dur=dur)
+
+    p_ne, conv, iters = best_response_dynamics(game, damping=0.6)
+    assert conv
+    print(f"asymmetric NE found in {iters} Gauss-Seidel sweeps "
+          f"(max profitable deviation "
+          f"{verify_equilibrium(game, p_ne):.2e})")
+    print(f"  mains nodes   (c=0.5): p = "
+          f"{[round(float(x), 3) for x in p_ne[:n//2]]}")
+    print(f"  battery nodes (c=9.0): p = "
+          f"{[round(float(x), 3) for x in p_ne[n//2:]]}")
+
+    ne_cost = float(game.social_cost(p_ne))
+    grid = jnp.linspace(1e-3, 1.0, 300)
+    uni_costs = [float(game.social_cost(jnp.full((n,), float(q))))
+                 for q in grid]
+    uni_best = float(grid[int(np.argmin(uni_costs))])
+    uni_cost = min(uni_costs)
+    p_opt = planner_coordinate_descent(game, p_ne)
+    het_cost = float(game.social_cost(p_opt))
+
+    print(f"\nsocial cost:")
+    print(f"  asymmetric NE                 {ne_cost:9.1f}")
+    print(f"  best uniform-p planner (p={uni_best:.2f}) {uni_cost:9.1f}")
+    print(f"  heterogeneity-aware planner   {het_cost:9.1f}")
+    print(f"\nheterogeneous PoA = {ne_cost / het_cost:.3f}")
+    if ne_cost < uni_cost:
+        print("note: the stratified NE UNDERCUTS the uniform planner — the "
+              "paper's common-p benchmark stops being the right target once "
+              "node costs differ.")
+
+
+if __name__ == "__main__":
+    main()

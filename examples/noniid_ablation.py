@@ -1,0 +1,98 @@
+"""Ablation: participation economics under non-iid (Dirichlet) client data.
+
+The paper assumes iid shards ("randomly but fairly divided"). Real IoT
+fleets are label-skewed; this ablation shows that non-iid data *steepens*
+d(p) — each missing participant withholds unique label mass, so low
+participation hurts more than the iid theory predicts, widening the
+Tragedy-of-the-Commons energy gap.
+
+Run:  PYTHONPATH=src python examples/noniid_ablation.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic import SyntheticCifar
+from repro.federated.simulation import FLConfig, run_simulation
+from repro.optim import sgd
+
+N_CLIENTS = 16
+N_SAMPLES = 8192
+
+
+def build_task(alpha: float | None):
+    """alpha=None -> iid; else Dirichlet(alpha) label-skew partition."""
+    data = SyntheticCifar(noise=7.0)
+    key = jax.random.PRNGKey(0)
+    full = data.batch(key, N_SAMPLES)
+    labels_np = np.asarray(full["labels"])
+    if alpha is None:
+        parts = iid_partition(N_SAMPLES, N_CLIENTS, seed=0)
+    else:
+        parts = dirichlet_partition(labels_np, N_CLIENTS, alpha=alpha, seed=0)
+    # pad shards to equal length so the sim can vmap (wrap-around sampling)
+    maxlen = max(len(p) for p in parts)
+    shards = np.stack([np.resize(p, maxlen) for p in parts])
+    images = jnp.asarray(np.asarray(full["images"])[shards])
+    labels = jnp.asarray(labels_np[shards])
+
+    def client_data(cid, rnd, n, steps):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(1), cid), rnd)
+        idx = jax.random.randint(key, (steps, n), 0, maxlen)
+        return {"images": images[cid][idx], "labels": labels[cid][idx]}
+
+    def init_params(key):
+        k1, k2 = jax.random.split(key)
+        d = 32 * 32 * 3
+        return {"w1": jax.random.normal(k1, (d, 32)) * d ** -0.5,
+                "b1": jnp.zeros(32),
+                "w2": jax.random.normal(k2, (32, 10)) * 32 ** -0.5,
+                "b2": jnp.zeros(10)}
+
+    def fwd(p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def loss_fn(p, b):
+        lp = jax.nn.log_softmax(fwd(p, b["images"]))
+        return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1))
+
+    def eval_fn(p, b):
+        return jnp.mean(jnp.argmax(fwd(p, b["images"]), -1) == b["labels"])
+
+    return data, init_params, loss_fn, eval_fn, client_data
+
+
+def main():
+    print(f"{'regime':<16}{'p':>6}{'rounds':>8}{'energy Wh':>11}")
+    results = {}
+    for alpha, label in [(None, "iid"), (0.1, "dirichlet(0.1)")]:
+        data, init_params, loss_fn, eval_fn, client_data = build_task(alpha)
+        for p in (0.25, 0.7):
+            fl = FLConfig(n_clients=N_CLIENTS, local_steps=1,
+                          batch_per_client=4, max_rounds=100,
+                          target_acc=0.73, seed=4)
+            res = run_simulation(fl, init_params, loss_fn, eval_fn,
+                                 client_data, data.val_set(512), sgd(0.12),
+                                 p=p)
+            results[(label, p)] = res.rounds
+            print(f"{label:<16}{p:>6.2f}{res.rounds:>8}"
+                  f"{res.energy_wh:>11.1f}"
+                  + ("" if res.converged else "  (no convergence)"))
+    iid_ratio = results[("iid", 0.25)] / max(results[("iid", 0.7)], 1)
+    nid_ratio = results[("dirichlet(0.1)", 0.25)] / max(
+        results[("dirichlet(0.1)", 0.7)], 1)
+    print(f"\nd(p=0.25)/d(p=0.7): iid {iid_ratio:.2f} vs "
+          f"non-iid {nid_ratio:.2f}")
+    if nid_ratio > iid_ratio:
+        print("non-iid steepens d(p) (here mildly): low participation costs "
+              "more than the iid theory predicts -> incentives matter more.")
+    else:
+        print("on this synthetic task label skew did not steepen d(p) "
+              "measurably — the template task is learnable from any shard.")
+
+
+if __name__ == "__main__":
+    main()

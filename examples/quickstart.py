@@ -1,0 +1,89 @@
+"""Quickstart: the paper in 60 seconds.
+
+1. Solve the participation game (NE, centralized optimum, PoA).
+2. Run a small participatory-FL simulation under each solution.
+3. Compare realized energy — the Tragedy of the Commons, measured.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import ParticipationController
+from repro.data.synthetic import SyntheticCifar
+from repro.federated.simulation import FLConfig, run_simulation
+from repro.optim import sgd
+
+
+def make_task():
+    data = SyntheticCifar(noise=7.0)
+
+    def init_params(key):
+        k1, k2 = jax.random.split(key)
+        d = 32 * 32 * 3
+        return {"w1": jax.random.normal(k1, (d, 32)) * d ** -0.5,
+                "b1": jnp.zeros(32),
+                "w2": jax.random.normal(k2, (32, 10)) * 32 ** -0.5,
+                "b2": jnp.zeros(10)}
+
+    def fwd(p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def loss_fn(p, b):
+        lp = jax.nn.log_softmax(fwd(p, b["images"]))
+        return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1))
+
+    def eval_fn(p, b):
+        return jnp.mean(jnp.argmax(fwd(p, b["images"]), -1) == b["labels"])
+
+    def client_data(cid, rnd, n, steps):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), cid), rnd)
+        return jax.vmap(lambda k: data.batch(k, n))(
+            jax.random.split(key, steps))
+
+    return data, init_params, loss_fn, eval_fn, client_data
+
+
+def main():
+    print("=== 1. Solve the participation game (N=50, gamma=0.6, c=2) ===")
+    ctrl = ParticipationController(n_nodes=50, gamma=0.6, cost=2.0, mode="ne")
+    diag = ctrl.diagnostics()
+    print(f"  NE participation p*        = {diag['p']:.3f}")
+    print(f"  centralized optimum p_opt  = {diag['opt_p']:.3f}")
+    print(f"  Price of Anarchy           = {diag['poa']:.3f}"
+          f"  (paper: 1.28 w/o incentive, ~1 with AoI incentive)")
+
+    print("\n=== 2. Run participatory FL under each solution ===")
+    data, init_params, loss_fn, eval_fn, client_data = make_task()
+    results = {}
+    scenarios = [
+        ("selfish NE (no incentive)", dict(gamma=0.0, mode="ne_worst")),
+        ("NE + AoI incentive", dict(gamma=0.6, mode="ne")),
+        ("centralized optimum", dict(gamma=0.0, mode="centralized")),
+    ]
+    for label, kw in scenarios:
+        c = ParticipationController(n_nodes=50, cost=2.0, **kw)
+        p = c.participation_probability()
+        fl = FLConfig(n_clients=50, local_steps=1, batch_per_client=2,
+                      max_rounds=120, target_acc=0.73)
+        res = run_simulation(fl, init_params, loss_fn, eval_fn, client_data,
+                             data.val_set(512), sgd(0.15), p=p, controller=c)
+        results[label] = res
+        print(f"  {label:28s} p={p:.2f}: {res.rounds} rounds, "
+              f"{res.energy_wh:7.1f} Wh "
+              f"(participation rate {res.participation_rate:.2f})")
+
+    print("\n=== 3. The energy verdict ===")
+    e_ne = results["selfish NE (no incentive)"].energy_wh
+    e_inc = results["NE + AoI incentive"].energy_wh
+    e_opt = results["centralized optimum"].energy_wh
+    print(f"  selfish / centralized energy ratio:   {e_ne / e_opt:.3f}"
+          f"   (paper: >= 1.28 -> the Tragedy of the Commons)")
+    print(f"  incentive / centralized energy ratio: {e_inc / e_opt:.3f}"
+          f"   (paper: ~1 -> the AoI incentive fixes it)")
+
+
+if __name__ == "__main__":
+    main()

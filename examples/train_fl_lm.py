@@ -1,0 +1,116 @@
+"""End-to-end driver: participatory federated training of a ~100M LM.
+
+Trains a 12-layer / d_model=768 decoder LM (~103M params, GPT-2-small class)
+for a few hundred FedAvg rounds on synthetic LM data, with game-theoretic
+participation control and full energy metering. This is deliverable (b)'s
+"train ~100M model for a few hundred steps" driver.
+
+CPU note: at the default --steps 200 this takes a few hours on the 1-core
+container; --small (~7M params) finishes in minutes with the same code path.
+
+Run:  PYTHONPATH=src python examples/train_fl_lm.py --small --steps 30
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import ParticipationController
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import get_model, param_count
+from repro.optim import adamw
+from repro.optim.base import apply_updates, clip_by_global_norm
+from repro.checkpoint.checkpoint import save_checkpoint
+
+LM_100M = ModelConfig(
+    name="fl-lm-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, d_ff=3072, vocab=32768,
+    act="swiglu", norm="rmsnorm", param_dtype="float32",
+    compute_dtype="float32",
+)
+
+LM_SMALL = dataclasses.replace(
+    LM_100M, name="fl-lm-small", n_layers=4, d_model=256, n_heads=8,
+    n_kv_heads=8, d_ff=1024, vocab=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--n-clients", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--gamma", type=float, default=0.6)
+    ap.add_argument("--cost", type=float, default=2.0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = LM_SMALL if args.small else LM_100M
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params, _ = api.init(key)
+    print(f"model {cfg.name}: {param_count(params):,} params")
+
+    ctrl = ParticipationController(n_nodes=50, gamma=args.gamma,
+                                   cost=args.cost, mode="ne")
+    p = ctrl.participation_probability()
+    print(f"game-theoretic participation p = {p:.3f} "
+          f"(opt {ctrl.diagnostics()['opt_p']:.3f}, "
+          f"PoA {ctrl.diagnostics()['poa']:.2f})")
+
+    data = SyntheticLM(vocab=cfg.vocab, order_weight=0.8)
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+    ledger = ctrl.new_ledger() if False else None  # ledger is per-50-nodes
+    from repro.core.energy import EnergyLedger
+    ledger = EnergyLedger.create(args.n_clients)
+
+    @jax.jit
+    def round_fn(params, opt_state, batch, mask):
+        def one(cb):
+            return jax.value_and_grad(lambda q: api.loss(q, cb))(params)
+
+        losses, grads = jax.vmap(one)(batch)
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        avg = jax.tree.map(
+            lambda g: jnp.sum(
+                g.astype(jnp.float32)
+                * m.reshape((-1,) + (1,) * (g.ndim - 1)), axis=0) / denom,
+            grads)
+        avg, gnorm = clip_by_global_norm(avg, 1.0)
+        updates, opt_state = opt.update(avg, opt_state, params)
+        new_params = apply_updates(params, updates)
+        keep = jnp.sum(m) > 0
+        new_params = jax.tree.map(
+            lambda a, b: jnp.where(keep, a, b), new_params, params)
+        return new_params, opt_state, jnp.sum(losses * m) / denom
+
+    t0 = time.time()
+    for step in range(args.steps):
+        kb = jax.random.fold_in(key, 100 + step)
+        batch = jax.vmap(lambda k: data.batch(k, args.batch, args.seq))(
+            jax.random.split(kb, args.n_clients))
+        mask = jax.random.bernoulli(jax.random.fold_in(kb, 1), p,
+                                    (args.n_clients,))
+        params, opt_state, loss = round_fn(params, opt_state, batch, mask)
+        ledger = ledger.record_round(mask, ctrl.energy_params)
+        if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"round {step:4d}  loss {float(loss):6.3f}  "
+                  f"k={int(mask.sum())}/{args.n_clients}  "
+                  f"energy {float(ledger.total_wh):7.2f} Wh  ({dt:6.1f}s)")
+    print("ledger:", ledger.summary())
+    if args.ckpt_dir:
+        print("saved", save_checkpoint(args.ckpt_dir, args.steps,
+                                       {"params": params},
+                                       metadata={"arch": cfg.name}))
+
+
+if __name__ == "__main__":
+    main()

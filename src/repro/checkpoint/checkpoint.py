@@ -1,0 +1,89 @@
+"""Pytree checkpointing to .npz (no orbax offline).
+
+Flattens any params/opt-state pytree with '/'-joined key paths, saves arrays
+with numpy, and restores into the exact original structure. Includes step /
+round / round-robin retention metadata for the FL round loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_META = "_checkpoint_meta"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16: store as f32 (lossless); restore_checkpoint
+            # casts back to the dtype of the `like` tree.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: dict | None = None, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    flat[_META] = np.frombuffer(
+        json.dumps({"step": step, **(metadata or {})}).encode(), dtype=np.uint8)
+    np.savez(path, **flat)
+    _gc(directory, keep)
+    return path
+
+
+def restore_checkpoint(directory: str, like: Any, step: int | None = None
+                       ) -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(bytes(data[_META].tobytes()).decode())
+        flat = {k: data[k] for k in data.files if k != _META}
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for path_k, leaf in leaves_like:
+        key = "/".join(_path_str(p) for p in path_k)
+        arr = flat[key]
+        restored.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), restored), meta
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        int(m.group(1)) for f in os.listdir(directory)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", f)))
+    for s in steps[:-keep]:
+        os.remove(os.path.join(directory, f"ckpt_{s:08d}.npz"))

@@ -1,0 +1,43 @@
+"""Game-theoretic participation control for federated learning (the paper).
+
+The game/energy math is done in float64 — NE root finding and the
+Poisson-Binomial DFT at N=50 want the headroom. Model/kernel code elsewhere
+in the package is explicitly dtype-annotated (bf16/f32) and unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.poibin import (  # noqa: E402,F401
+    expected_duration,
+    poibin_mean,
+    poibin_pmf,
+    poibin_pmf_recursive,
+    symmetric_pmf,
+)
+from repro.core.duration import (  # noqa: E402,F401
+    PAPER_TABLE_II,
+    PAPER_N_CLIENTS,
+    DurationModel,
+    fit_polynomial_duration,
+    paper_duration_model,
+    theoretical_duration,
+)
+from repro.core.aoi import expected_aoi  # noqa: E402,F401
+from repro.core.comm80211ax import CommParams, airtime_model  # noqa: E402,F401
+from repro.core.energy import EnergyParams, EnergyLedger, task_energy  # noqa: E402,F401
+from repro.core.utility import UtilityParams, player_utility, social_utility  # noqa: E402,F401
+from repro.core.game import (  # noqa: E402,F401
+    GameSolution,
+    best_response,
+    centralized_optimum,
+    price_of_anarchy,
+    solve_symmetric_ne,
+)
+from repro.core.controller import ParticipationController  # noqa: E402,F401
+from repro.core.asymmetric import (  # noqa: E402,F401
+    HeterogeneousGame,
+    best_response_dynamics,
+    planner_coordinate_descent,
+)
+from repro.core.online import OnlineDurationEstimator  # noqa: E402,F401

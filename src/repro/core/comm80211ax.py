@@ -1,0 +1,108 @@
+"""IEEE 802.11ax airtime/energy model for the FL model-update upload.
+
+Reproduces the communication model of the paper (Table I; full derivation in
+Guerra et al., "The cost of training machine learning models over distributed
+data sources", IEEE OJ-COMS 2023): a single-user HE transmission with
+RTS/CTS protection and a fixed contention window. ``T_tx`` is the airtime to
+upload the ``S_w``-byte model update; ``E_tx = P_tx * T_tx`` (paper eq. 2).
+
+All quantities are scalars; the model is closed-form and jit-free by design
+(it parameterizes the game, it is not inside the training step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["CommParams", "airtime_model", "PAPER_COMM"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommParams:
+    """Table I — Communication (IEEE 802.11ax), 20 MHz, 1 spatial stream."""
+
+    tx_power_dbm: float = 9.0          # P_tx for edge devices
+    sigma_legacy_us: float = 4.0       # legacy OFDM symbol duration
+    n_subcarriers: int = 234           # 20 MHz RU
+    n_spatial_streams: int = 1
+    t_empty_slot_us: float = 9.0
+    t_sifs_us: float = 16.0
+    t_difs_us: float = 34.0
+    t_phy_preamble_us: float = 20.0    # legacy preamble
+    t_he_su_us: float = 100.0          # HE single-user field duration
+    l_ofdm_symbol_bits: int = 24       # L_s, legacy rate for control frames
+    l_rts_bits: int = 160
+    l_cts_bits: int = 112
+    l_ack_bits: int = 240
+    l_service_bits: int = 16
+    l_mac_header_bits: int = 320
+    contention_window: int = 15        # CW (fixed)
+    bits_per_symbol_per_sc: float = 10.0  # 1024-QAM 5/6 → 8.33; MCS settable
+    sigma_he_us: float = 13.6          # HE OFDM symbol (incl. 0.8 us GI)
+    a_mpdu_max_bits: int = 65536 * 8   # max A-MPDU aggregate size
+
+
+PAPER_COMM = CommParams()
+
+
+def _control_frame_us(p: CommParams, l_bits: int) -> float:
+    """Legacy-rate control frame airtime (preamble + ceil(bits/24) symbols)."""
+    n_sym = math.ceil((l_bits + p.l_service_bits) / p.l_ofdm_symbol_bits)
+    return p.t_phy_preamble_us + n_sym * p.sigma_legacy_us
+
+
+def airtime_model(
+    payload_bytes: float,
+    params: CommParams = PAPER_COMM,
+) -> dict:
+    """Airtime to upload ``payload_bytes`` over 802.11ax single-user HE.
+
+    The payload (the 44.73 MB ResNet-18 update in the paper) is fragmented
+    into maximum-size A-MPDUs; each transmission pays
+    DIFS + backoff + RTS/CTS + HE preamble + data symbols + SIFS + ACK.
+
+    Returns dict with ``t_tx_s`` (total airtime, seconds), ``t_data_s``,
+    ``t_overhead_s``, ``n_ampdu``, ``goodput_mbps``.
+    """
+    p = params
+    bits_total = payload_bytes * 8.0
+    data_bits_per_symbol = (
+        p.n_subcarriers * p.n_spatial_streams * p.bits_per_symbol_per_sc)
+
+    mpdu_bits = p.a_mpdu_max_bits
+    n_ampdu = max(1, math.ceil(bits_total / mpdu_bits))
+
+    t_rts = _control_frame_us(p, p.l_rts_bits)
+    t_cts = _control_frame_us(p, p.l_cts_bits)
+    t_ack = _control_frame_us(p, p.l_ack_bits)
+    mean_backoff_us = (p.contention_window / 2.0) * p.t_empty_slot_us
+
+    per_txop_overhead_us = (
+        p.t_difs_us + mean_backoff_us
+        + t_rts + p.t_sifs_us + t_cts + p.t_sifs_us
+        + p.t_phy_preamble_us + p.t_he_su_us
+        + p.t_sifs_us + t_ack)
+
+    def data_airtime_us(bits: float) -> float:
+        n_sym = math.ceil(
+            (bits + p.l_mac_header_bits + p.l_service_bits) / data_bits_per_symbol)
+        return n_sym * p.sigma_he_us
+
+    full, rem = divmod(bits_total, mpdu_bits)
+    t_data_us = full * data_airtime_us(mpdu_bits)
+    if rem > 0:
+        t_data_us += data_airtime_us(rem)
+    t_overhead_us = n_ampdu * per_txop_overhead_us
+    t_total_us = t_data_us + t_overhead_us
+
+    tx_power_w = 10.0 ** (p.tx_power_dbm / 10.0) * 1e-3
+    t_total_s = t_total_us * 1e-6
+    return {
+        "t_tx_s": t_total_s,
+        "t_data_s": t_data_us * 1e-6,
+        "t_overhead_s": t_overhead_us * 1e-6,
+        "n_ampdu": n_ampdu,
+        "goodput_mbps": (bits_total / t_total_us) if t_total_us else 0.0,
+        "tx_power_w": tx_power_w,
+        "e_tx_wh": tx_power_w * t_total_s / 3600.0,
+    }

@@ -1,0 +1,150 @@
+"""ParticipationController — the paper's mechanism as a framework feature.
+
+Bridges the game-theory layer to the FL runtime:
+
+* derives the per-round duration/energy parameters either from the paper's
+  calibration (IoT scenario) or from a compiled dry-run's roofline terms
+  (datacenter scenario: T_train = HLO FLOPs / (chips × peak), P_hw = chip TDP);
+* solves the game for the configured (gamma, c) and hands the runtime either
+  the NE probability (distributed mode), the centralized optimum
+  (centralized mode), or a fixed user probability;
+* meters realized energy per round through :class:`EnergyLedger` and exposes
+  convergence/PoA diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.duration import DurationModel, paper_duration_model
+from repro.core.energy import EnergyLedger, EnergyParams
+from repro.core.game import GameSolution, solve_game
+from repro.core.utility import UtilityParams
+
+__all__ = ["ParticipationController", "RooflineClock"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineClock:
+    """Analytic per-round timing from a compiled dry-run (CPU container:
+    we cannot wall-clock a TPU, so T_train is modeled from the roofline).
+
+    Attributes:
+        flops_per_step: HLO FLOPs of one local training step (cost_analysis).
+        hbm_bytes_per_step: HLO bytes accessed per step.
+        steps_per_round: local steps in one FL round (E epochs × batches).
+        chips: chips available to one client (shard group size).
+        peak_flops: per-chip peak (bf16), default TPU v5e 197e12.
+        hbm_bw: per-chip HBM bandwidth, default 819e9 B/s.
+        chip_power_w: per-chip board power for E_train accounting.
+    """
+
+    flops_per_step: float
+    hbm_bytes_per_step: float
+    steps_per_round: int = 1
+    chips: int = 1
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    chip_power_w: float = 170.0
+
+    @property
+    def t_train_s(self) -> float:
+        t_compute = self.flops_per_step / (self.chips * self.peak_flops)
+        t_memory = self.hbm_bytes_per_step / (self.chips * self.hbm_bw)
+        return self.steps_per_round * max(t_compute, t_memory)
+
+    @property
+    def p_hw_w(self) -> float:
+        return self.chips * self.chip_power_w
+
+
+@dataclasses.dataclass
+class ParticipationController:
+    """Chooses and applies the per-node participation probability.
+
+    Modes:
+        "ne"          — symmetric NE of the paper's game (distributed nodes).
+        "ne_worst"    — worst-cost NE (the PoA numerator; pessimistic).
+        "centralized" — centralized optimum (the PoA denominator).
+        "fixed"       — externally supplied probability.
+    """
+
+    n_nodes: int
+    gamma: float = 0.0
+    cost: float = 0.0
+    mode: Literal["ne", "ne_worst", "centralized", "fixed"] = "ne"
+    fixed_p: float = 0.5
+    duration_model: Optional[DurationModel] = None
+    energy_params: EnergyParams = dataclasses.field(default_factory=EnergyParams)
+    _solution: Optional[GameSolution] = dataclasses.field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.duration_model is None:
+            self.duration_model = paper_duration_model()
+        if self.duration_model.n_nodes != self.n_nodes:
+            raise ValueError(
+                f"duration model is for N={self.duration_model.n_nodes}, "
+                f"controller has N={self.n_nodes}")
+
+    # -- game ---------------------------------------------------------------
+    @property
+    def utility_params(self) -> UtilityParams:
+        return UtilityParams(gamma=self.gamma, cost=self.cost,
+                             n_nodes=self.n_nodes)
+
+    def solve(self) -> GameSolution:
+        if self._solution is None:
+            self._solution = solve_game(self.utility_params,
+                                        self.duration_model)
+        return self._solution
+
+    def participation_probability(self) -> float:
+        if self.mode == "fixed":
+            return float(self.fixed_p)
+        sol = self.solve()
+        if self.mode == "centralized":
+            return sol.opt_p
+        if not sol.equilibria:
+            return 0.0
+        if self.mode == "ne_worst":
+            worst = max(range(len(sol.equilibria)),
+                        key=lambda i: sol.ne_costs[i])
+            return sol.equilibria[worst]
+        # "ne": the paper reports the best-cost NE curve in Figs. 4-5
+        best = min(range(len(sol.equilibria)), key=lambda i: sol.ne_costs[i])
+        return sol.equilibria[best]
+
+    # -- runtime hooks --------------------------------------------------------
+    def draw_masks(self, key: jax.Array, n_rounds: int) -> jax.Array:
+        """(n_rounds, N) Bernoulli participation masks, deterministic in key."""
+        p = self.participation_probability()
+        return jax.random.bernoulli(key, p, (n_rounds, self.n_nodes))
+
+    def new_ledger(self) -> EnergyLedger:
+        return EnergyLedger.create(self.n_nodes)
+
+    def with_roofline(self, clock: RooflineClock) -> "ParticipationController":
+        """Rebuild the controller with dry-run-derived timing/power."""
+        ep = dataclasses.replace(
+            self.energy_params,
+            p_hw_w=clock.p_hw_w,
+            t_train_s=min(clock.t_train_s, self.energy_params.t_round_s),
+        )
+        return dataclasses.replace(self, energy_params=ep, _solution=None)
+
+    def diagnostics(self) -> dict:
+        sol = self.solve()
+        return {
+            "mode": self.mode,
+            "p": self.participation_probability(),
+            "equilibria": sol.equilibria,
+            "ne_costs": sol.ne_costs,
+            "opt_p": sol.opt_p,
+            "opt_cost": sol.opt_cost,
+            "poa": sol.poa,
+            "e_participant_j": self.energy_params.e_participant_j,
+            "e_idle_j": self.energy_params.e_idle_j,
+        }

@@ -1,0 +1,204 @@
+"""Symmetric Nash equilibria, centralized optimum, and Price of Anarchy.
+
+The game (paper §III): players = N nodes, actions = participation
+probabilities p_i ∈ [0, 1], utilities = eq. (11). By symmetry we search for
+symmetric equilibria p* where p* is a global best response to the other
+N-1 nodes playing p* (paper eq. 12 states the first-order condition; we use
+the full global-best-response definition so corner equilibria at p → 0 — the
+Tragedy of the Commons collapse — are found too).
+
+PoA (eq. 13) compares the worst-cost NE against the centralized optimum,
+with cost = E[D] + c·p (the AoI incentive is a transfer; see utility.py).
+
+Numerics: grid scan + vectorized utility evaluation (the whole utility is a
+closed-form JAX function of p), then local golden-section refinement of best
+responses, then damped fixed-point iteration cross-checked by direct
+enumeration of BR fixed points on the grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.duration import DurationModel
+from repro.core.utility import (
+    UtilityParams,
+    social_cost,
+    social_utility,
+    symmetric_player_utility,
+)
+
+__all__ = [
+    "GameSolution",
+    "best_response",
+    "own_marginal",
+    "solve_symmetric_ne",
+    "centralized_optimum",
+    "price_of_anarchy",
+    "solve_game",
+]
+
+P_MIN = 1e-3  # p=0 exactly makes AoI/horizon math singular; the paper's
+P_MAX = 1.0   # "p -> 0" collapse is represented by the grid's lowest cell.
+GRID = 2000
+
+
+def _p_grid(n: int = GRID) -> jnp.ndarray:
+    return jnp.linspace(P_MIN, P_MAX, n)
+
+
+def best_response(
+    p_sym: float,
+    params: UtilityParams,
+    dur: DurationModel,
+    grid: jnp.ndarray | None = None,
+) -> tuple[float, float]:
+    """Global best response of one node to the others all playing ``p_sym``.
+
+    Returns (argmax p_i, utility at argmax). Vectorized over the action grid;
+    exact because u_i is *linear* in p_i given the others (see
+    symmetric_player_utility) apart from the concave -γ·log(AoI) and linear
+    -c·p terms — so the grid only needs to localize a 1-D maximum.
+    """
+    g = _p_grid() if grid is None else grid
+    u = jax.vmap(lambda pi: symmetric_player_utility(pi, jnp.asarray(p_sym),
+                                                     params, dur))(g)
+    i = int(jnp.argmax(u))
+    # golden-section refine inside the bracketing cells (utility is smooth)
+    lo = float(g[max(i - 1, 0)])
+    hi = float(g[min(i + 1, g.shape[0] - 1)])
+    f = lambda x: float(symmetric_player_utility(
+        jnp.asarray(x), jnp.asarray(p_sym), params, dur))
+    invphi = (np.sqrt(5.0) - 1.0) / 2.0
+    a, b = lo, hi
+    c_, d_ = b - invphi * (b - a), a + invphi * (b - a)
+    fc, fd = f(c_), f(d_)
+    for _ in range(40):
+        if fc > fd:
+            b, d_, fd = d_, c_, fc
+            c_ = b - invphi * (b - a)
+            fc = f(c_)
+        else:
+            a, c_, fc = c_, d_, fd
+            d_ = a + invphi * (b - a)
+            fd = f(d_)
+    x = 0.5 * (a + b)
+    return x, f(x)
+
+
+@dataclasses.dataclass
+class GameSolution:
+    """All symmetric equilibria plus the centralized benchmark."""
+
+    equilibria: list[float]
+    ne_costs: list[float]
+    opt_p: float
+    opt_cost: float
+    poa: float
+    params: UtilityParams
+
+
+def own_marginal(
+    params: UtilityParams,
+    dur: DurationModel,
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """φ(p) = ∂u_i/∂p_i evaluated at the symmetric profile p_i = p_-i = p.
+
+    This is exactly the paper's eq. (12) restricted to symmetric profiles.
+    Computed by jax.grad through the Poisson-Binomial decomposition in
+    ``symmetric_player_utility``.
+    """
+    g = jax.grad(lambda pi, ps: symmetric_player_utility(pi, ps, params, dur),
+                 argnums=0)
+    return lambda p: g(p, p)
+
+
+def solve_symmetric_ne(
+    params: UtilityParams,
+    dur: DurationModel,
+    grid_size: int = 800,
+) -> list[float]:
+    """Enumerate symmetric NEs as roots of φ(p) = ∂u_i/∂p_i|_sym plus corners.
+
+    Why roots suffice: given the others at p, u_i(p_i) is *linear* in p_i in
+    its duration and cost terms and strictly concave in the γ·AoI term. So if
+    φ(p*) = 0 the symmetric action p* is a (for γ>0: the unique; for γ=0: an
+    indifference-supported mixed) global best response — i.e. an NE. Corner
+    equilibria: p = P_MIN is an NE iff φ(P_MIN) ≤ 0 (nobody wants to raise
+    participation — the Tragedy-of-the-Commons collapse); p = 1 is an NE iff
+    φ(1) ≥ 0.
+    """
+    phi = own_marginal(params, dur)
+    grid = jnp.linspace(P_MIN, P_MAX, grid_size)
+    vals = np.asarray(jax.vmap(phi)(grid))
+    if not np.all(np.isfinite(vals)):
+        raise FloatingPointError("non-finite marginal utility on the grid")
+    nes: list[float] = []
+    if vals[0] <= 0.0:
+        nes.append(float(grid[0]))
+    if vals[-1] >= 0.0:
+        nes.append(float(grid[-1]))
+    sign = np.sign(vals)
+    for i in np.nonzero(sign[:-1] * sign[1:] < 0)[0]:
+        lo, hi = float(grid[i]), float(grid[i + 1])
+        flo = float(vals[i])
+        for _ in range(60):  # bisection
+            mid = 0.5 * (lo + hi)
+            fm = float(phi(jnp.asarray(mid)))
+            if fm == 0.0 or hi - lo < 1e-10:
+                lo = hi = mid
+                break
+            if (fm > 0) == (flo > 0):
+                lo, flo = mid, fm
+            else:
+                hi = mid
+        root = 0.5 * (lo + hi)
+        if not any(abs(root - e) < 1e-4 for e in nes):
+            nes.append(root)
+    return sorted(nes)
+
+
+def centralized_optimum(
+    params: UtilityParams,
+    dur: DurationModel,
+    grid_size: int = 2000,
+) -> tuple[float, float]:
+    """Symmetric p minimizing the social cost E[D] + c*p. Returns (p*, cost)."""
+    g = _p_grid(grid_size)
+    costs = jax.vmap(lambda p: social_cost(p, params, dur))(g)
+    i = int(jnp.argmin(costs))
+    return float(g[i]), float(costs[i])
+
+
+def price_of_anarchy(
+    equilibria: list[float],
+    opt_cost: float,
+    params: UtilityParams,
+    dur: DurationModel,
+    cap: float = 1e6,
+) -> tuple[float, list[float]]:
+    """Eq. (13): worst-NE social cost over optimal social cost."""
+    if not equilibria:
+        return float("inf"), []
+    costs = [float(social_cost(jnp.asarray(p), params, dur))
+             for p in equilibria]
+    worst = max(costs)
+    poa = worst / max(opt_cost, 1e-12)
+    return min(poa, cap), costs
+
+
+def solve_game(
+    params: UtilityParams,
+    dur: DurationModel,
+    ne_grid: int = 400,
+) -> GameSolution:
+    """End-to-end: equilibria + optimum + PoA for one (gamma, c) setting."""
+    nes = solve_symmetric_ne(params, dur, grid_size=ne_grid)
+    opt_p, opt_cost = centralized_optimum(params, dur)
+    poa, ne_costs = price_of_anarchy(nes, opt_cost, params, dur)
+    return GameSolution(equilibria=nes, ne_costs=ne_costs, opt_p=opt_p,
+                        opt_cost=opt_cost, poa=poa, params=params)

@@ -1,0 +1,107 @@
+"""Player utility (paper eq. 11) and the social objective used for PoA.
+
+    u_i = -E[D] - gamma * log(E[delta_i]) - c * p_i
+
+* ``E[D]`` — expected task duration, eq. (8), via the Poisson-Binomial pmf of
+  the participant count and the duration model d(k).
+* ``log(E[delta_i])`` — AoI incentive, eq. (10): rewards frequent participation.
+* ``c * p_i`` — the node's private (energy) participation cost; ``c`` converts
+  energy into utility units (the paper sweeps it).
+
+For the Price of Anarchy we use the *social cost* ``E[D] + c*p`` per node —
+the AoI incentive is a transfer paid by the sink, not a physical cost, so it
+nets out of the welfare comparison (the paper's centralized optimum at c=0 is
+the E[D] minimizer, p ≈ 0.61, which matches this reading).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aoi import log_aoi
+from repro.core.duration import DurationModel
+from repro.core.poibin import poibin_pmf
+
+__all__ = [
+    "UtilityParams",
+    "player_utility",
+    "symmetric_player_utility",
+    "social_utility",
+    "social_cost",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class UtilityParams:
+    """Weights of eq. (11)."""
+
+    gamma: float = 0.0   # AoI incentive weight
+    cost: float = 0.0    # participation cost factor c
+    n_nodes: int = 50
+
+
+def _expected_duration_profile(p_vec: jax.Array, dur: DurationModel) -> jax.Array:
+    """E[D] (eq. 8) for an arbitrary (possibly asymmetric) profile."""
+    pmf = poibin_pmf(p_vec)
+    return jnp.sum(pmf * dur.table())
+
+
+def player_utility(
+    p_i: jax.Array,
+    p_others: jax.Array,
+    params: UtilityParams,
+    dur: DurationModel,
+) -> jax.Array:
+    """u_i of eq. (11) with opponents fixed at ``p_others`` (shape (N-1,))."""
+    p_vec = jnp.concatenate([jnp.reshape(p_i, (1,)), jnp.asarray(p_others)])
+    e_d = _expected_duration_profile(p_vec, dur)
+    return -e_d - params.gamma * log_aoi(p_i) - params.cost * p_i
+
+
+def symmetric_player_utility(
+    p_i: jax.Array,
+    p_sym: jax.Array,
+    params: UtilityParams,
+    dur: DurationModel,
+) -> jax.Array:
+    """u_i when the other N-1 nodes all play ``p_sym``.
+
+    Uses the decomposition  m = X_i + m_-i,  m_-i ~ Binomial(N-1, p_sym):
+        E[D] = p_i * E[d(m_-i + 1)] + (1 - p_i) * E[d(m_-i)],
+    which keeps the profile evaluation O(N) instead of building an N-vector —
+    and makes ∂u_i/∂p_i exact and cheap (it is the *constant* slope
+    E[d(m_-i+1)] - E[d(m_-i)] plus the private terms).
+    """
+    n = params.n_nodes
+    pmf_others = poibin_pmf(jnp.full((n - 1,), p_sym))          # (N,) over 0..N-1
+    d_tab = dur.table()                                          # (N+1,)
+    e_d_without = jnp.sum(pmf_others * d_tab[:-1])
+    e_d_with = jnp.sum(pmf_others * d_tab[1:])
+    e_d = p_i * e_d_with + (1.0 - p_i) * e_d_without
+    return -e_d - params.gamma * log_aoi(p_i) - params.cost * p_i
+
+
+def social_utility(
+    p_sym: jax.Array,
+    params: UtilityParams,
+    dur: DurationModel,
+    include_incentive: bool = False,
+) -> jax.Array:
+    """Per-node utility when everyone plays ``p_sym`` (symmetric profile)."""
+    pmf = poibin_pmf(jnp.full((params.n_nodes,), p_sym))
+    e_d = jnp.sum(pmf * dur.table())
+    u = -e_d - params.cost * p_sym
+    if include_incentive:
+        u = u - params.gamma * log_aoi(p_sym)
+    return u
+
+
+def social_cost(
+    p_sym: jax.Array,
+    params: UtilityParams,
+    dur: DurationModel,
+) -> jax.Array:
+    """Per-node social cost E[D] + c*p used in the PoA (eq. 13)."""
+    return -social_utility(p_sym, params, dur, include_incentive=False)

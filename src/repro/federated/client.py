@@ -1,0 +1,41 @@
+"""Client-side local training: E epochs of SGD on the private shard.
+
+``local_train`` is a pure function (params in, params out) so the simulation
+can ``vmap`` it across all clients — every client starts each round from the
+same global model (FedAvg), which makes the whole round a single XLA program.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, apply_updates
+
+__all__ = ["local_train", "make_local_train"]
+
+
+def local_train(loss_fn: Callable, params, batches: dict, opt: Optimizer):
+    """Run one optimizer step per leading-axis slice of ``batches``.
+
+    batches: pytree whose leaves have leading axis = number of local steps
+    (E epochs x minibatches, pre-shaped by the caller).
+    """
+    opt_state = opt.init(params)
+
+    def step(carry, batch):
+        p, s = carry
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        updates, s = opt.update(grads, s, p)
+        return (apply_updates(p, updates), s), loss
+
+    (params, _), losses = jax.lax.scan(step, (params, opt_state), batches)
+    return params, losses
+
+
+def make_local_train(loss_fn: Callable, opt: Optimizer):
+    """Returns f(params, batches) -> (new_params, losses), vmap-ready."""
+    def fn(params, batches):
+        return local_train(loss_fn, params, batches, opt)
+    return fn

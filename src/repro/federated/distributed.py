@@ -1,0 +1,99 @@
+"""Cluster-mode FedAvg: clients are data-parallel shard groups (shard_map).
+
+In datacenter FL (DESIGN.md §3) each client is one shard group along the
+``data`` (and ``pod``) mesh axes. Each group computes its local update from
+its private shard; the merge is a participation-masked ``psum`` over those
+axes — the paper's eq.-FedAvg with Bernoulli participation, expressed as an
+explicit collective so the roofline's collective term *is* the paper's
+merge cost.
+
+``fedavg_allreduce_merge`` is written with ``jax.shard_map``: per-device
+code sees its own client's update + scalar mask and participates in two
+psums (masked sum + participant count).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["fedavg_allreduce_merge", "make_cluster_round"]
+
+
+def fedavg_allreduce_merge(global_params, local_update, mask_local,
+                           mesh: Mesh, axes: Sequence[str] = ("data",)):
+    """Masked FedAvg across mesh axes via shard_map + psum.
+
+    Args:
+        global_params: replicated pytree (previous global model).
+        local_update: pytree with the same structure — THIS shard group's
+            proposed params, sharded so each (axes)-group holds its own
+            version (leading 'client' dim of size = prod(axes sizes)).
+        mask_local: (n_clients,) bool — participation of each group.
+    Returns:
+        merged params, replicated (identical on every device).
+    """
+    n_clients = 1
+    for a in axes:
+        n_clients *= mesh.shape[a]
+
+    def merge_fn(g, upd, mask):
+        # per-device view: upd leaves have leading dim 1 (this group's copy)
+        idx = jax.lax.axis_index(axes[0])
+        if len(axes) > 1:
+            for a in axes[1:]:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        m = mask[idx].astype(jnp.float32)
+        total = jax.lax.psum(m, axes)
+
+        def one(g_leaf, u_leaf):
+            contrib = u_leaf[0].astype(jnp.float32) * m
+            s = jax.lax.psum(contrib, axes)
+            avg = s / jnp.maximum(total, 1e-9)
+            return jnp.where(total > 0, avg,
+                             g_leaf.astype(jnp.float32)).astype(g_leaf.dtype)
+
+        return jax.tree.map(one, g, upd)
+
+    client_spec = P(tuple(axes))
+    in_specs = (
+        jax.tree.map(lambda _: P(), global_params),
+        jax.tree.map(lambda _: client_spec, local_update),
+        P(),
+    )
+    out_specs = jax.tree.map(lambda _: P(), global_params)
+    fn = jax.shard_map(merge_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(global_params, local_update, mask_local)
+
+
+def make_cluster_round(loss_fn, opt, mesh: Mesh, axes=("data",)):
+    """One cluster FL round: local step per shard group + masked merge.
+
+    Returns round(params, opt_state, batch, mask) jittable under `mesh`,
+    where batch leaves have a leading client dim sharded over `axes`.
+    """
+    n_clients = 1
+    for a in axes:
+        n_clients *= mesh.shape[a]
+
+    def round_fn(params, opt_state, batch, mask):
+        def local(p, b):
+            loss, grads = jax.value_and_grad(loss_fn)(p, b)
+            updates, _ = opt.update(grads, opt.init(p), p)
+            from repro.optim.base import apply_updates
+            return apply_updates(p, updates), loss
+
+        def per_client(b):
+            return local(params, b)
+
+        client_params, losses = jax.vmap(
+            per_client, in_axes=(jax.tree.map(lambda _: 0, batch),))(batch)
+        merged = fedavg_allreduce_merge(params, client_params, mask, mesh,
+                                        axes)
+        return merged, losses
+
+    return round_fn

@@ -1,0 +1,34 @@
+"""Bernoulli participation machinery (the paper's §III decision process).
+
+Each node holds a fixed probability p_i set a priori (by the game's NE, the
+centralized optimum, or the user) and flips an independent coin each round.
+Everything here is jittable and deterministic in the PRNG key so multi-host
+replicas draw identical masks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["round_mask", "mask_schedule", "participant_count"]
+
+
+def round_mask(key: jax.Array, p: jax.Array) -> jax.Array:
+    """(N,) bool participation mask for one round. p: scalar or (N,)."""
+    p = jnp.asarray(p)
+    n = p.shape[0] if p.ndim else None
+    if n is None:
+        raise ValueError("pass a per-node probability vector, e.g. "
+                         "jnp.full((n_nodes,), p)")
+    return jax.random.bernoulli(key, p, (n,))
+
+
+def mask_schedule(key: jax.Array, p: jax.Array, n_rounds: int) -> jax.Array:
+    """(n_rounds, N) masks, one key-fold per round."""
+    p = jnp.asarray(p)
+    keys = jax.random.split(key, n_rounds)
+    return jax.vmap(lambda k: jax.random.bernoulli(k, p, p.shape))(keys)
+
+
+def participant_count(mask: jax.Array) -> jax.Array:
+    return jnp.sum(mask.astype(jnp.int32), axis=-1)

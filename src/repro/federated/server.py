@@ -1,0 +1,76 @@
+"""FedAvg server: participation-masked merge + convergence tracking.
+
+The merge implements McMahan et al.'s FedAvg restricted to the round's
+participants (paper §III): equal data shards ⇒ unweighted mean over the
+participating subset. If nobody participates the global model is unchanged
+(the round is wasted — exactly the energy/duration penalty the game studies).
+
+``fedavg_merge`` operates on *stacked* client params (leading client axis) so
+it runs as one fused XLA op per leaf — and has a Pallas twin
+(:mod:`repro.kernels.fedavg_agg`) for the TPU hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fedavg_merge", "ConvergenceTracker"]
+
+
+def fedavg_merge(global_params, client_params, mask: jax.Array,
+                 weights: jax.Array | None = None):
+    """Masked (weighted) average of stacked client params.
+
+    Args:
+        global_params: pytree (no client axis) — fallback when k = 0.
+        client_params: same pytree with leading client axis N.
+        mask: (N,) bool/0-1 participation.
+        weights: optional (N,) data-size weights (paper: equal shards).
+    """
+    m = mask.astype(jnp.float32)
+    if weights is not None:
+        m = m * weights.astype(jnp.float32)
+    total = jnp.sum(m)
+    safe = jnp.maximum(total, 1e-9)
+
+    def merge(g, c):
+        mexp = m.reshape((-1,) + (1,) * (c.ndim - 1)).astype(jnp.float32)
+        avg = jnp.sum(c.astype(jnp.float32) * mexp, axis=0) / safe
+        return jnp.where(total > 0, avg, g.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree.map(merge, global_params, client_params)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ConvergenceTracker:
+    """Paper §IV: converged when val acc >= target for 3 consecutive rounds."""
+
+    target: jax.Array            # float scalar
+    needed: jax.Array            # int scalar (3 in the paper)
+    streak: jax.Array
+    converged_at: jax.Array      # round index or -1
+
+    @staticmethod
+    def create(target: float = 0.73, needed: int = 3) -> "ConvergenceTracker":
+        return ConvergenceTracker(
+            target=jnp.asarray(target, jnp.float32),
+            needed=jnp.asarray(needed, jnp.int32),
+            streak=jnp.zeros((), jnp.int32),
+            converged_at=jnp.asarray(-1, jnp.int32),
+        )
+
+    def update(self, acc: jax.Array, round_idx: jax.Array) -> "ConvergenceTracker":
+        hit = acc >= self.target
+        streak = jnp.where(hit, self.streak + 1, 0)
+        first = (self.converged_at < 0) & (streak >= self.needed)
+        return ConvergenceTracker(
+            target=self.target, needed=self.needed, streak=streak,
+            converged_at=jnp.where(first, round_idx, self.converged_at))
+
+    @property
+    def converged(self) -> jax.Array:
+        return self.converged_at >= 0

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+flash_attention — streaming-softmax attention (causal/sliding-window, GQA)
+rwkv6_scan      — WKV6 recurrence with data-dependent decay
+ssm_scan        — Mamba-style selective scan (Hymba's SSM branch)
+fedavg_agg      — fused participation-masked FedAvg parameter merge
+fused_ce        — cross-entropy via streamed vocab tiles (no (T,V) logits)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
+``ops.py`` (interpret=True on CPU, compiled on TPU).
+"""
+from repro.kernels import ops, ref

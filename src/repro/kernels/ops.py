@@ -1,0 +1,80 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; on this CPU container they run in
+``interpret=True`` mode (the kernel body executes step-by-step in Python/XLA,
+validating the exact TPU program logic). ``use_pallas()`` reports whether the
+model layer should route through these or the pure-jnp references.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fedavg_agg import fedavg_agg as _fedavg_pallas
+from repro.kernels.fused_ce import fused_ce as _fused_ce_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6_pallas
+from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
+
+__all__ = ["attention", "rwkv6", "ssm", "fedavg", "cross_entropy",
+           "use_pallas", "fedavg_merge_pallas"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def use_pallas() -> bool:
+    """Pallas path is always available (interpret on CPU); models opt in."""
+    return True
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128):
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k,
+                         interpret=_interpret())
+
+
+def rwkv6(r, k, v, w, u, *, block_t: int = 256):
+    return _rwkv6_pallas(r, k, v, w, u, block_t=block_t,
+                         interpret=_interpret())
+
+
+def ssm(x, delta, a_log, b, c, d_skip, *, block_t: int = 256,
+        block_d: int = 512):
+    return _ssm_pallas(x, delta, a_log, b, c, d_skip, block_t=block_t,
+                       block_d=block_d, interpret=_interpret())
+
+
+def fedavg(global_flat, client_flat, mask, *, block_p: int = 2048):
+    return _fedavg_pallas(global_flat, client_flat, mask, block_p=block_p,
+                          interpret=_interpret())
+
+
+def fedavg_merge_pallas(global_params, client_params, mask):
+    """Drop-in replacement for federated.server.fedavg_merge: flattens the
+    pytree, runs the fused kernel, restores structure."""
+    g_leaves = jax.tree.leaves(global_params)
+    c_leaves = jax.tree.leaves(client_params)
+    sizes = [int(x.size) for x in g_leaves]
+    g_flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                              for x in g_leaves])
+    c_flat = jnp.concatenate([c.reshape(c.shape[0], -1).astype(jnp.float32)
+                              for c in c_leaves], axis=1)
+    merged = fedavg(g_flat, c_flat, mask)
+    out, off = [], 0
+    for g, size in zip(g_leaves, sizes):
+        out.append(merged[off:off + size].reshape(g.shape).astype(g.dtype))
+        off += size
+    return jax.tree.unflatten(jax.tree.structure(global_params), out)
+
+
+def cross_entropy(hidden, w_vocab, labels, *, block_t: int = 128,
+                  block_v: int = 512):
+    """Fused per-token NLL without materializing (T, V) logits in HBM."""
+    return _fused_ce_pallas(hidden, w_vocab, labels, block_t=block_t,
+                            block_v=block_v, interpret=_interpret())

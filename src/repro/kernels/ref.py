@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "rwkv6_scan_ref", "ssm_scan_ref",
+           "fedavg_agg_ref", "fused_ce_ref"]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B,S,H,D); k,v: (B,S,KV,D); GQA broadcast; fp32 softmax.
+
+    window > 0 limits attention to the last `window` positions (inclusive of
+    self): j in (i-window, i].
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, s, kvh, groups, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i >= j
+    if window > 0:
+        mask &= (i - j) < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state=None):
+    """Sequential WKV6 (same math as models.rwkv.wkv_scan).
+
+    r,k,v,w: (B,S,H,D); u: (H,D); state: (B,H,D,D) or None.
+    Returns (out (B,S,H,D), final_state fp32).
+    """
+    b, s, h, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), jnp.float32)
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(st, rkvw):
+        rt, kt, vt, wt = rkvw
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, st + uf[..., None] * kv)
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    state, outs = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
+
+
+def ssm_scan_ref(x, delta, a_log, b, c, d_skip, h0=None):
+    """Mamba selective scan (same math as models.ssm.selective_scan).
+
+    x, delta: (B,S,Din); a_log: (Din,N); b,c: (B,S,N); d_skip: (Din,);
+    h0: (B,Din,N) or None. Returns (y (B,S,Din), h_final fp32).
+    """
+    bsz, s, d_in = x.shape
+    n = a_log.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d_in, n), jnp.float32)
+    xf = x.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    da = jnp.exp(df[..., None] * (-jnp.exp(a_log))[None, None])
+    dbx = df[..., None] * b.astype(jnp.float32)[:, :, None, :] * xf[..., None]
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0),
+                          jnp.moveaxis(c.astype(jnp.float32), 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1) + xf * d_skip[None, None]
+    return y.astype(x.dtype), h
+
+
+def fedavg_agg_ref(global_flat, client_flat, mask):
+    """Masked mean over the client axis with k=0 fallback.
+
+    global_flat: (P,); client_flat: (N,P); mask: (N,). fp32 accumulation.
+    """
+    m = mask.astype(jnp.float32)
+    total = jnp.sum(m)
+    avg = jnp.einsum("np,n->p", client_flat.astype(jnp.float32), m) \
+        / jnp.maximum(total, 1e-9)
+    return jnp.where(total > 0, avg,
+                     global_flat.astype(jnp.float32)).astype(global_flat.dtype)
+
+
+def fused_ce_ref(hidden, w_vocab, labels):
+    """Per-token NLL via dense logits (the memory hog the kernel avoids)."""
+    logits = (hidden.astype(jnp.float32) @ w_vocab.astype(jnp.float32))
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    lab = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32),
+                              axis=1)[:, 0]
+    return lse - lab

@@ -1,0 +1,156 @@
+"""Continuous-batching serving scheduler (slot-based, vLLM-lite).
+
+A fixed pool of B decode slots shares one jitted ``serve_step``. Each slot
+holds an independent request at its own depth — the per-row ``positions``
+support added to the decode path makes rows fully independent, so a
+finishing request's slot is refilled immediately from the queue while other
+slots keep decoding (no batch barrier between requests).
+
+Prompt tokens are fed through the same decode path (prefill-by-replay, one
+token per engine tick per slot) — simple, correct, and adequate for the
+CPU container; a chunked-prefill fast path is the natural TPU upgrade.
+
+Only full-buffer and recurrent cache families are supported here
+(dense/moe/vlm-text and rwkv6); the ring cache keys slots by absolute
+position, which composes the same way (per-row ``pos % W``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import ModelApi
+
+__all__ = ["Request", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                       # next write position for this row
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatcher:
+    """Slot scheduler over a shared batched decode step."""
+
+    def __init__(self, api: ModelApi, params, n_slots: int,
+                 max_len: int, ring: bool = False, greedy: bool = True,
+                 seed: int = 0):
+        self.api = api
+        self.cfg: ModelConfig = api.cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.ring = ring
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.cache, _ = api.init_cache(n_slots, max_len, ring)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._step = jax.jit(
+            lambda p, c, t, pos: api.serve_step(p, c, t, pos, ring=ring))
+        self.ticks = 0
+
+    # -- public api ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        """Engine loop until queue + slots drain (or tick budget)."""
+        while (self.queue or any(not s.free for s in self.slots)) \
+                and self.ticks < max_ticks:
+            self._refill()
+            self._tick()
+        return self.finished
+
+    # -- internals -----------------------------------------------------------
+    def _refill(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.free and self.queue:
+                slot.req = self.queue.popleft()
+                slot.pos = 0
+                self._reset_row(i)
+
+    def _reset_row(self, i: int) -> None:
+        """Zero row i of every cache buffer. Full-buffer KV rows are already
+        correct via position masking; recurrent/ring state (rwkv, hymba)
+        genuinely leaks across requests without this."""
+        def zero_row(x):
+            if hasattr(x, "ndim") and x.ndim >= 2:
+                return x.at[:, i].set(jnp.zeros_like(x[:, i]))
+            return x
+        self.cache = jax.tree.map(zero_row, self.cache)
+
+    def _next_token_for(self, slot: _Slot) -> int:
+        """Token to feed this tick: prompt token or last generated."""
+        req = slot.req
+        if slot.pos < len(req.prompt):
+            return int(req.prompt[slot.pos])
+        return int(req.generated[-1]) if req.generated else 0
+
+    def _tick(self) -> None:
+        self.ticks += 1
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        positions = np.zeros((self.n_slots,), np.int32)
+        active = []
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                # park idle rows at position 0 writing token 0; their cache
+                # row is reinitialized on refill via position restart
+                positions[i] = max(self.max_len - 1, 0) if not self.ring \
+                    else slot.pos
+                continue
+            tokens[i, 0] = self._next_token_for(slot)
+            positions[i] = slot.pos
+            active.append(i)
+        if not active:
+            return
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions))
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        else:
+            self.key, sk = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(sk, logits[:, -1]))
+        for i in active:
+            slot = self.slots[i]
+            req = slot.req
+            slot.pos += 1
+            in_prompt = slot.pos < len(req.prompt)
+            if not in_prompt:
+                req.generated.append(int(nxt[i]))
+            hit_len = (slot.pos + 1 >= self.max_len and not self.ring)
+            if len(req.generated) >= req.max_new or hit_len:
+                req.done = True
+                self.finished.append(req)
+                slot.req = None
+
+    # -- introspection ---------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "finished": len(self.finished),
+            "queued": len(self.queue),
+            "active": sum(not s.free for s in self.slots),
+        }

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); that's why this module sets XLA_FLAGS at line 1-2 and
+why conftest/pyproject do NOT set it (smoke tests see 1 device).
+
+For each combination this:
+  1. builds ShapeDtypeStruct stand-ins for params / optimizer state / inputs
+     (zero allocation),
+  2. resolves logical-axis shardings via the rules engine,
+  3. ``jax.jit(step).lower(...).compile()`` on the production mesh,
+  4. records memory_analysis / cost_analysis / the collective schedule parsed
+     from the partitioned HLO into a JSON artifact (consumed by the roofline
+     benchmark and EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out experiments/dryrun
+"""
+import argparse
+import collections
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, SKIPS, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.sharding import (DECODE_RULES, PRESETS, TRAIN_RULES,
+                                   Rules, resolve_specs)
+from repro.models.registry import get_model
+from repro.optim import adamw
+from repro.optim.base import apply_updates
+
+# logical specs for input batches, by key name
+_INPUT_SPECS = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "token": ("batch", "seq"),
+    "patches": ("batch", "seq", "frontend"),
+    "frames": ("batch", "frames", "embed"),
+    "pos": (),
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective op class from partitioned HLO.
+
+    Shapes in post-SPMD HLO are per-device. Per-chip bytes moved are
+    estimated with ring-algorithm factors at the roofline stage; here we
+    record raw result bytes + op counts.
+    """
+    out: dict = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*(\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for cls in _COLLECTIVES:
+            if op == cls or op.startswith(cls + "-"):
+                total = 0
+                for dt, dims in shape_re.findall(m.group(1)):
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    total += n * _DTYPE_BYTES[dt]
+                out[cls]["count"] += 1
+                out[cls]["bytes"] += total
+                break
+    return out
+
+
+def _sds_tree(f, *args):
+    return jax.eval_shape(f, *args)
+
+
+def _build_param_specs(api):
+    holder = {}
+
+    def init_only(key):
+        p, s = api.init(key)
+        holder["specs"] = s
+        return p
+
+    params_sds = jax.eval_shape(init_only, jax.random.PRNGKey(0))
+    return params_sds, holder["specs"]
+
+
+def _input_shardings(batch_sds: dict, mesh, rules: Rules):
+    specs = {k: _INPUT_SPECS.get(k, None) for k in batch_sds}
+    return resolve_specs(batch_sds, specs, mesh, rules, note="inputs")
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def make_train_step(api, opt):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss(p, batch, remat=True))(params)
+        updates, new_opt = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), new_opt, loss
+    return train_step
+
+
+def make_eval_step(api):
+    def eval_step(params, batch):
+        return api.loss(params, batch, remat=False)
+    return eval_step
+
+
+@dataclasses.dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: str = ""
+    memory: dict = dataclasses.field(default_factory=dict)
+    cost: dict = dataclasses.field(default_factory=dict)
+    collectives: dict = dataclasses.field(default_factory=dict)
+    sizes: dict = dataclasses.field(default_factory=dict)
+    relaxations: list = dataclasses.field(default_factory=list)
+
+
+def probe_depths(cfg: ModelConfig) -> tuple[int, int]:
+    """Two depths whose cost delta isolates one scanned layer.
+
+    XLA cost_analysis counts a while/scan body ONCE regardless of trip
+    count, so the full-depth artifact undercounts FLOPs/bytes by ~L×. The
+    roofline pass corrects with f(L) ≈ f(d1) + (L - d1)·(f(d2) − f(d1)).
+    MoE models with a dense prefix need d ≥ prefix + 1 so the probe varies
+    the MoE body, not the prefix.
+    """
+    prefix = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    d1 = prefix + 1
+    return d1, d1 + 1
+
+
+def _with_depth(cfg: ModelConfig, depth: int) -> ModelConfig:
+    changes: dict = {"n_layers": depth, "name": f"{cfg.name}-d{depth}"}
+    if cfg.encoder_layers:
+        changes["encoder_layers"] = depth
+    return dataclasses.replace(cfg, **changes)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            rules_override: dict | None = None,
+            remat: bool = True, depth: int | None = None,
+            opt_rules_override: dict | None = None) -> DryrunResult:
+    from repro.models import runtime
+    cfg = get_config(arch)
+    runtime.SCAN_UNROLL = False
+    if depth is not None:
+        cfg = _with_depth(cfg, depth)
+        # probes need the layer stack unrolled: cost_analysis counts a
+        # while-loop body once regardless of trip count
+        runtime.SCAN_UNROLL = True
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        api = get_model(cfg)
+        rules_base = TRAIN_RULES if shape.kind != "decode" else DECODE_RULES
+        rules = Rules(table=dict(rules_base.table))
+        if rules_override:
+            rules = rules.with_overrides(**rules_override)
+
+        params_sds, param_specs = _build_param_specs(api)
+        param_sh = resolve_specs(params_sds, param_specs, mesh, rules,
+                                 note=f"{arch}-params")
+        batch_sds = api.input_specs(shape)
+        batch_sh = _input_shardings(batch_sds, mesh, rules)
+
+        if shape.kind in ("train", "prefill"):
+            if shape.kind == "train":
+                opt = adamw(3e-4)
+                opt_sds = jax.eval_shape(opt.init, params_sds)
+                if opt_rules_override:
+                    # ZeRO-style: optimizer state sharded independently of
+                    # the (possibly replicated) parameters
+                    zrules = Rules(table=dict(rules.table))
+                    zrules = zrules.with_overrides(**opt_rules_override)
+                    mv_sh = resolve_specs(params_sds, param_specs, mesh,
+                                          zrules, note=f"{arch}-optstate")
+                else:
+                    mv_sh = param_sh
+                opt_sh = {
+                    "m": mv_sh, "v": mv_sh,
+                    "step": NamedSharding(mesh, P()),
+                }
+                step = make_train_step(api, opt)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(param_sh, opt_sh, batch_sh),
+                    out_shardings=(param_sh, opt_sh,
+                                   NamedSharding(mesh, P())),
+                )
+                with mesh:
+                    lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+            else:
+                step = make_eval_step(api)
+                jitted = jax.jit(step, in_shardings=(param_sh, batch_sh),
+                                 out_shardings=NamedSharding(mesh, P()))
+                with mesh:
+                    lowered = jitted.lower(params_sds, batch_sds)
+        else:
+            kind = api.cache_kind(shape)
+            ring = kind["ring"]
+            cache_holder = {}
+
+            def cache_only():
+                c, s = api.init_cache(shape.global_batch, kind["length"], ring)
+                cache_holder["specs"] = s
+                return c
+
+            cache_sds = jax.eval_shape(cache_only)
+            cache_sh = resolve_specs(cache_sds, cache_holder["specs"], mesh,
+                                     rules, note=f"{arch}-cache")
+            serve = lambda p, c, t, pos: api.serve_step(p, c, t, pos,
+                                                        ring=ring)
+            jitted = jax.jit(
+                serve,
+                in_shardings=(param_sh, cache_sh, batch_sh["token"],
+                              batch_sh["pos"]),
+                out_shardings=(None, cache_sh),
+            )
+            with mesh:
+                lowered = jitted.lower(params_sds, cache_sds,
+                                       batch_sds["token"], batch_sds["pos"])
+
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    mem_d[attr] = int(v)
+        try:
+            cost = dict(compiled.cost_analysis() or {})
+            cost = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and not k.startswith("utilization")}
+        except Exception as e:  # pragma: no cover
+            cost = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+
+        res = DryrunResult(
+            arch=arch, shape=shape_name, mesh=mesh_name, ok=True,
+            seconds=round(time.time() - t0, 1),
+            memory=mem_d, cost=cost, collectives=coll,
+            sizes={
+                "param_bytes": _tree_bytes(params_sds),
+                "batch_bytes": _tree_bytes(batch_sds),
+                "n_devices": int(np.prod(list(mesh.shape.values()))),
+            },
+            relaxations=list(rules.relaxations),
+        )
+        return res
+    except Exception:
+        return DryrunResult(arch=arch, shape=shape_name, mesh=mesh_name,
+                            ok=False, seconds=round(time.time() - t0, 1),
+                            error=traceback.format_exc(limit=8))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="depth-probe pass (d1, d1+1) for per-layer cost "
+                         "deltas; single-pod mesh only")
+    ap.add_argument("--preset", default="baseline", choices=sorted(PRESETS),
+                    help="sharding preset from launch.sharding.PRESETS")
+    args = ap.parse_args()
+    rules_ov, opt_ov = PRESETS[args.preset]
+    suffix = "" if args.preset == "baseline" else f"__{args.preset}"
+
+    os.makedirs(args.out, exist_ok=True)
+    arch_list = list(ARCHITECTURES) if (args.all or not args.arch) else [args.arch]
+    shape_list = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    if args.probe:
+        combos_p: list[tuple[str, str, int]] = []
+        for a in arch_list:
+            d1, d2 = probe_depths(get_config(a))
+            for s in shape_list:
+                if (a, s) in SKIPS:
+                    continue
+                combos_p.extend([(a, s, d1), (a, s, d2)])
+        n_fail = 0
+        for a, s, d in combos_p:
+            path = os.path.join(args.out, f"{a}__{s}__16x16{suffix}__d{d}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {a} {s} d{d}")
+                continue
+            res = run_one(a, s, multi_pod=False, depth=d,
+                          rules_override=rules_ov, opt_rules_override=opt_ov)
+            blob = dataclasses.asdict(res)
+            blob["depth"] = d
+            with open(path, "w") as f:
+                json.dump(blob, f, indent=1)
+            status = "OK " if res.ok else "FAIL"
+            print(f"[{status}] {a:18s} {s:12s} d{d}  {res.seconds:6.1f}s"
+                  + ("" if res.ok else f"  {res.error.splitlines()[-1]}"),
+                  flush=True)
+            n_fail += 0 if res.ok else 1
+        print(f"probe done: {len(combos_p) - n_fail}/{len(combos_p)} OK")
+        raise SystemExit(1 if n_fail else 0)
+
+    combos: list[tuple[str, str, bool]] = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in arch_list:
+        for s in shape_list:
+            if (a, s) in SKIPS:
+                continue
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    n_fail = 0
+    for a, s, mp in combos:
+        mesh_name = "2x16x16" if mp else "16x16"
+        path = os.path.join(args.out, f"{a}__{s}__{mesh_name}{suffix}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {a} {s} {mesh_name}")
+            continue
+        res = run_one(a, s, mp, rules_override=rules_ov,
+                      opt_rules_override=opt_ov)
+        with open(path, "w") as f:
+            json.dump(dataclasses.asdict(res), f, indent=1)
+        status = "OK " if res.ok else "FAIL"
+        print(f"[{status}] {a:18s} {s:12s} {mesh_name:8s} {res.seconds:7.1f}s"
+              + ("" if res.ok else f"  {res.error.splitlines()[-1]}"),
+              flush=True)
+        if not res.ok:
+            n_fail += 1
+    print(f"done: {len(combos) - n_fail}/{len(combos)} OK")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh definitions (TPU v5e pods).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Hardware constants used by the roofline analysis live here too.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 v5e pod (256 chips), or 2 pods = 512 chips with a 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+class HW:
+    """TPU v5e per-chip roofline constants (assignment-specified)."""
+
+    PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+    HBM_BW = 819e9                # B/s
+    ICI_BW = 50e9                 # B/s per link
+    CHIP_POWER_W = 170.0          # board power (energy model coupling)
+    HBM_BYTES = 16e9              # capacity, for memory_analysis sanity

@@ -1,0 +1,197 @@
+"""Logical-axis → mesh-axis rules engine (MaxText-style).
+
+Models annotate every param/cache dimension with a logical name
+(``repro.models.layers``). Here a *rules table* maps logical names to an
+ordered list of candidate mesh axes; the resolver picks the first candidate
+whose size divides the dimension, else leaves the dim unsharded and records
+the relaxation (e.g. phi4's 24 heads on a 16-way model axis).
+
+This single mechanism drives the smoke tests (trivial 1-device mesh), the
+multi-pod dry-run, and the perf iterations (rule-table swaps are the main
+hillclimbing knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "TRAIN_RULES", "DECODE_RULES", "resolve_specs",
+           "batch_rules_axes"]
+
+# a candidate is a mesh axis name, a tuple of axis names, or None
+Candidate = Any
+
+
+@dataclasses.dataclass
+class Rules:
+    """Ordered candidates per logical axis; first divisible wins."""
+
+    table: dict[str, list[Candidate]]
+    relaxations: list[str] = dataclasses.field(default_factory=list)
+
+    def candidates(self, logical: str) -> list[Candidate]:
+        return self.table.get(logical, [None])
+
+    def with_overrides(self, **overrides) -> "Rules":
+        t = dict(self.table)
+        for k, v in overrides.items():
+            t[k] = v
+        return Rules(table=t)
+
+
+def _axis_size(mesh: Mesh, cand: Candidate) -> int:
+    if cand is None:
+        return 1
+    if isinstance(cand, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in cand]))
+    return mesh.shape[cand]
+
+
+def _mesh_axes(mesh: Mesh) -> set:
+    return set(mesh.axis_names)
+
+
+def _filter_cand(mesh: Mesh, cand: Candidate) -> Optional[Candidate]:
+    """Drop candidates referencing axes this mesh doesn't have (e.g. 'pod'
+    on the single-pod mesh) — collapse tuples to their present members."""
+    if cand is None:
+        return None
+    if isinstance(cand, (tuple, list)):
+        present = tuple(a for a in cand if a in _mesh_axes(mesh))
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+    return cand if cand in _mesh_axes(mesh) else None
+
+
+def resolve_one(shape: tuple, logical: tuple, mesh: Mesh, rules: Rules,
+                used_note: str = "") -> P:
+    """PartitionSpec for one array; no mesh axis reused across dims."""
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        chosen = None
+        if name is not None:
+            for cand in rules.candidates(name):
+                cand = _filter_cand(mesh, cand)
+                if cand is None:
+                    continue
+                axes = cand if isinstance(cand, tuple) else (cand,)
+                if any(a in used for a in axes):
+                    continue
+                size = _axis_size(mesh, cand)
+                if size > 1 and dim % size == 0:
+                    chosen = cand
+                    used.update(axes)
+                    break
+            if chosen is None and rules.candidates(name) != [None]:
+                want = rules.candidates(name)[0]
+                if want is not None:
+                    rules.relaxations.append(
+                        f"{used_note}: dim {name}={dim} not divisible by "
+                        f"{want} -> replicated")
+        parts.append(chosen)
+    # trailing Nones can be dropped
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def resolve_specs(shapes_tree, specs_tree, mesh: Mesh, rules: Rules,
+                  note: str = ""):
+    """Tree of NamedShardings for (shapes, logical specs) twin pytrees."""
+    def resolve(shape_leaf, spec_leaf):
+        if spec_leaf is None or not isinstance(spec_leaf, tuple):
+            return NamedSharding(mesh, P())
+        shape = getattr(shape_leaf, "shape", ())
+        if len(shape) != len(spec_leaf):
+            # scalar-or-mismatch: replicate (e.g. cache 'pos' scalars)
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, resolve_one(shape, spec_leaf, mesh, rules, note))
+
+    return jax.tree.map(
+        resolve, shapes_tree, specs_tree,
+        is_leaf=lambda v: isinstance(v, tuple) or v is None)
+
+
+# --------------------------------------------------------------------------
+# rule tables
+# --------------------------------------------------------------------------
+
+# Baseline training rules: FSDP-style param sharding over 'data' is NOT used;
+# params live on 'model' (tensor parallel) and are replicated across 'data'
+# and 'pod'; activations shard batch over ('pod','data'). This is the
+# paper-era baseline; perf iterations add FSDP/zero-style variants.
+TRAIN_RULES = Rules(table={
+    # params
+    "vocab": ["model"],
+    "embed": [None],
+    "embed_out": [None],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "head": [None],
+    "head_v": [None],
+    "mlp": ["model"],
+    "expert": ["model"],
+    "inner": ["model"],
+    "q_lora": [None],
+    "kv_lora": [None],
+    "mix_lora": [None],
+    "decay_lora": [None],
+    "dt_rank": [None],
+    "state": [None],
+    "state_proj": ["model"],
+    "conv": [None],
+    "stream": [None],
+    "frontend": [None],
+    "layers": [None],
+    # activations / batch
+    "batch": [("pod", "data")],
+    "seq": [None],
+    "frames": [None],
+})
+
+# Decode: KV cache batch over ('pod','data'), heads over 'model'.
+DECODE_RULES = Rules(table={
+    **TRAIN_RULES.table,
+    "batch": [("pod", "data")],
+    "seq": [None],
+})
+
+
+def batch_rules_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# --------------------------------------------------------------------------
+# named presets (the §Perf hillclimb results; see EXPERIMENTS.md)
+# --------------------------------------------------------------------------
+
+# Each preset: (rules_override, opt_rules_override). `opt_rules_override`
+# shards the Adam m/v independently of the parameters (ZeRO-1).
+PRESETS: dict[str, tuple[dict, dict | None]] = {
+    # paper-era TP+DP — the faithful baseline
+    "baseline": ({}, None),
+    # sequence-parallel activations: the fix for head counts that don't
+    # divide the 16-way model axis (16.1x memory win on minicpm3 prefill)
+    "seqpar": ({"seq": ["model"]}, None),
+    # pure 256-way data parallelism + ZeRO-1 optimizer sharding: the right
+    # scheme for <=7 GB (bf16) models (24x collective win on rwkv6 train,
+    # 10x on stablelm train). NOT applicable to deepseek/internvl2 scale.
+    "fulldp_zero1": (
+        {"batch": [("pod", "data", "model")],
+         "mlp": [None], "vocab": [None], "embed": [None], "heads": [None],
+         "kv_heads": [None], "inner": [None], "expert": [None],
+         "state_proj": [None], "decay_lora": [None], "mix_lora": [None]},
+        {"mlp": ["model"], "vocab": ["model"], "embed": ["model"],
+         "heads": ["model"], "kv_heads": ["model"], "inner": ["model"],
+         "expert": ["model"], "state_proj": ["model"],
+         "decay_lora": ["model"], "mix_lora": ["model"]},
+    ),
+}

@@ -1,0 +1,141 @@
+"""Production training driver.
+
+Runs the selected architecture on the local device set (1 CPU here, a v5e
+pod in production — same code path, the mesh just grows) with the
+participatory-FL layer on top: the data-parallel axis is partitioned into
+``n_clients`` virtual clients whose Bernoulli participation masks gate their
+gradient contribution each round, merged FedAvg-style; the participation
+probability comes from the game-theoretic controller.
+
+Usage:
+  python -m repro.launch.train --arch gemma-2b --reduced --steps 20
+  python -m repro.launch.train --arch olmoe-1b-7b --reduced --gamma 0.6 --cost 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.controller import ParticipationController
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import get_model, param_count
+from repro.optim import adamw
+from repro.optim.base import apply_updates, clip_by_global_norm
+from repro.checkpoint.checkpoint import save_checkpoint
+
+
+def make_fl_train_step(api, opt, n_clients: int):
+    """One FL round: per-client grads -> Bernoulli-masked FedAvg of grads.
+
+    With equal shards, FedAvg over one local step == masked gradient
+    averaging; this keeps the whole round a single XLA program. The batch
+    leading axis is (clients, per_client_batch, ...).
+    """
+    def step(params, opt_state, batch, mask):
+        def client_loss(p, cb):
+            return api.loss(p, cb, remat=True)
+
+        def one_client(cb):
+            return jax.value_and_grad(client_loss)(params, cb)
+
+        losses, grads = jax.vmap(one_client)(batch)
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+
+        def merge(g):
+            mm = m.reshape((-1,) + (1,) * (g.ndim - 1))
+            return jnp.sum(g.astype(jnp.float32) * mm, axis=0) / denom
+
+        avg_grads = jax.tree.map(merge, grads)
+        avg_grads, gnorm = clip_by_global_norm(avg_grads, 1.0)
+        updates, opt_state = opt.update(avg_grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        # if nobody participated, keep old params (wasted round)
+        any_part = jnp.sum(m) > 0
+        new_params = jax.tree.map(
+            lambda new, old: jnp.where(any_part, new, old), new_params, params)
+        return new_params, opt_state, jnp.sum(losses * m) / denom, gnorm
+
+    return step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the architecture")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8, help="per-client batch")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--n-clients", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--gamma", type=float, default=0.6)
+    ap.add_argument("--cost", type=float, default=2.0)
+    ap.add_argument("--p-mode", default="ne",
+                    choices=["ne", "ne_worst", "centralized", "fixed"])
+    ap.add_argument("--fixed-p", type=float, default=0.5)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = api.init(key)
+    print(f"arch={cfg.name} params={param_count(params):,}")
+
+    controller = ParticipationController(
+        n_nodes=50, gamma=args.gamma, cost=args.cost, mode=args.p_mode,
+        fixed_p=args.fixed_p)
+    p = controller.participation_probability()
+    diag = controller.diagnostics()
+    print(f"participation p={p:.3f} (mode={args.p_mode}, "
+          f"opt_p={diag['opt_p']:.3f}, PoA={diag['poa']:.3f})")
+
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+    data = SyntheticLM(vocab=cfg.vocab, seed=args.seed)
+    step_fn = jax.jit(make_fl_train_step(api, opt, args.n_clients))
+
+    ledger = controller.new_ledger() if controller.n_nodes == args.n_clients \
+        else None
+    t0 = time.time()
+    for step in range(args.steps):
+        kb = jax.random.fold_in(key, 1000 + step)
+        batch = jax.vmap(
+            lambda k: data.batch(k, args.batch, args.seq))(
+                jax.random.split(kb, args.n_clients))
+        if cfg.family == "vlm":
+            batch["patches"] = jax.random.normal(
+                jax.random.fold_in(kb, 7),
+                (args.n_clients, args.batch, cfg.n_patches, cfg.d_frontend))
+        if cfg.family == "audio":
+            batch["frames"] = jax.random.normal(
+                jax.random.fold_in(kb, 8),
+                (args.n_clients, args.batch, cfg.n_frames, cfg.d_model))
+        mask = jax.random.bernoulli(jax.random.fold_in(kb, 9), p,
+                                    (args.n_clients,))
+        params, opt_state, loss, gnorm = step_fn(params, opt_state, batch,
+                                                 mask)
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(loss):7.4f} "
+                  f"gnorm {float(gnorm):8.3f} "
+                  f"participants {int(mask.sum())}/{args.n_clients} "
+                  f"({time.time()-t0:5.1f}s)")
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.steps,
+                               {"params": params, "opt": opt_state},
+                               metadata={"arch": cfg.name})
+        print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Hymba-style hybrid blocks: parallel attention + mamba heads per layer.
+
+Each layer runs a (sliding-window) GQA attention branch and a selective-SSM
+branch *in parallel on the same normalized input*, normalizes each branch
+output, and averages them (arXiv:2411.13676 §2; meta-tokens are omitted —
+see DESIGN.md §9). Decode carries both a KV ring cache (attention) and the
+O(1) SSM recurrent state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import runtime
+
+Params = dict
+
+
+def init_block(cfg: ModelConfig, key):
+    ks = L.split_tree(key, 4)
+    dtype = L._dtype(cfg.param_dtype)
+    p, s = {}, {}
+    p["ln_mix"], s["ln_mix"] = L.init_norm(cfg, dtype)
+    p["ln_mlp"], s["ln_mlp"] = L.init_norm(cfg, dtype)
+    p["attn"], s["attn"] = L.init_attention(cfg, ks[0])
+    p["ssm"], s["ssm"] = S.init_ssm(cfg, ks[1])
+    p["mlp"], s["mlp"] = L.init_mlp(cfg, ks[2])
+    # per-branch output norms (Hymba normalizes before averaging)
+    p["norm_attn_out"], s["norm_attn_out"] = L.init_norm(cfg, dtype)
+    p["norm_ssm_out"], s["norm_ssm_out"] = L.init_norm(cfg, dtype)
+    return p, s
+
+
+def block_apply(cfg: ModelConfig, params, x, positions, window=0,
+                cache=None, ring=False):
+    """cache: {"kv": <attention cache>, "ssm": <ssm state>} or None."""
+    h = L.apply_norm(cfg, params["ln_mix"], x)
+    kv_cache = cache["kv"] if cache is not None else None
+    attn_y, new_kv = L.attention_apply(cfg, params["attn"], h, positions,
+                                       window=window, cache=kv_cache,
+                                       ring=ring)
+    ssm_state = cache["ssm"] if cache is not None else None
+    ssm_y, new_ssm = S.ssm_apply(cfg, params["ssm"], h, state=ssm_state)
+    attn_y = L.apply_norm(cfg, params["norm_attn_out"], attn_y)
+    ssm_y = L.apply_norm(cfg, params["norm_ssm_out"], ssm_y)
+    x = x + 0.5 * (attn_y + ssm_y)
+    h = L.apply_norm(cfg, params["ln_mlp"], x)
+    x = x + L.mlp_apply(cfg, params["mlp"], h)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"kv": new_kv, "ssm": new_ssm}
+    return x, new_cache
+
+
+def init_lm(cfg: ModelConfig, key):
+    dtype = L._dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head = L.split_tree(key, 3)
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.dense_init(
+        k_embed, (cfg.vocab, cfg.d_model), ("vocab", "embed"), dtype,
+        in_axis_sizes=cfg.d_model, scale=cfg.d_model**-0.5)
+    keys = L.split_tree(k_layers, cfg.n_layers)
+    ps, ss = [], None
+    for i in range(cfg.n_layers):
+        bp, bs = init_block(cfg, keys[i])
+        ps.append(bp)
+        ss = bs
+    p["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ps) \
+        if len(ps) > 1 else jax.tree.map(lambda v: v[None], ps[0])
+    s["layers"] = jax.tree.map(lambda ax: ("layers",) + ax, ss,
+                               is_leaf=lambda v: isinstance(v, tuple))
+    p["ln_f"], s["ln_f"] = L.init_norm(cfg, dtype)
+    p["lm_head"], s["lm_head"] = L.dense_init(
+        k_head, (cfg.d_model, cfg.vocab), ("embed", "vocab"), dtype)
+    return p, s
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, ring: bool,
+               prefill_len: int = 0):
+    """Stacked per-layer hybrid cache: attention KV + SSM state."""
+    kv, kv_specs = L.init_kv_cache(cfg, batch, length, ring, prefill_len)
+    st, st_specs = S.init_ssm_state(cfg, batch)
+    one = {"kv": kv, "ssm": st}
+    specs_one = {"kv": kv_specs, "ssm": st_specs}
+    n = cfg.n_layers
+    cache = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (n,) + v.shape), one)
+    specs = jax.tree.map(
+        lambda ax: ("layers",) + ax if isinstance(ax, tuple) else ax,
+        specs_one, is_leaf=lambda v: isinstance(v, tuple))
+    return cache, specs
+
+
+def _scan(cfg, params, x, positions, window, caches, remat, ring=False):
+    def body(carry, xs):
+        xv = carry
+        lp = xs[0]
+        lc = xs[1] if caches is not None else None
+        out, nc = block_apply(cfg, lp, xv, positions, window=window,
+                              cache=lc, ring=ring)
+        return out, nc
+
+    fn = jax.checkpoint(body) if remat else body
+    xs = (params["layers"],) if caches is None else (params["layers"], caches)
+    x, ncs = jax.lax.scan(fn, x, xs, unroll=runtime.layer_scan_unroll())
+    return x, ncs
+
+
+def forward(cfg: ModelConfig, params, tokens, remat=False):
+    cdt = L._dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, tokens.shape)
+    window = cfg.sliding_window  # Hymba uses SWA natively in train too
+    x, _ = _scan(cfg, params, x, positions, window, None, remat)
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits.astype(L._dtype(cfg.logit_dtype))
+
+
+def lm_loss(cfg: ModelConfig, params, batch: dict, remat=False):
+    logits = forward(cfg, params, batch["tokens"], remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def serve_step(cfg: ModelConfig, params, cache, token, pos, ring: bool = True):
+    cdt = L._dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(cdt)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (pos[:, None] if pos.ndim == 1 else
+                 jnp.broadcast_to(jnp.reshape(pos, (1, 1)),
+                                  (token.shape[0], 1)))
+    x, new_cache = _scan(cfg, params, x, positions, cfg.sliding_window,
+                         cache, remat=False, ring=ring)
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits.astype(L._dtype(cfg.logit_dtype)), new_cache

@@ -1,0 +1,216 @@
+"""Uniform model API: name -> init / loss / serve_step / cache / input_specs.
+
+The launch layer (dry-run, train, serve) and the FL substrate only talk to
+:class:`ModelApi`; family dispatch lives here.
+
+Decode semantics per family (DESIGN.md §4):
+* dense/moe/vlm — full-buffer KV cache for ``decode_32k``; ring-buffer
+  (sliding-window) cache for ``long_500k``.
+* hybrid (hymba) — ring KV (its attention is natively sliding-window) + SSM
+  state for both decode shapes.
+* ssm (rwkv6) — O(1) recurrent state for both decode shapes.
+* audio (whisper) — self-KV cache + precomputed cross-KV; no long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, hybrid, rwkv, transformer
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], tuple[Params, dict]]
+    loss: Callable[..., jax.Array]                  # (params, batch, remat=)
+    serve_step: Callable[..., tuple]                # (params, cache, token, pos)
+    init_cache: Callable[..., tuple]                # (batch, length, ring)
+    input_specs: Callable[[ShapeSpec], dict]        # ShapeDtypeStructs
+    cache_kind: Callable[[ShapeSpec], dict]         # {"length":…, "ring":…}
+
+
+def _token_sds(batch, seq):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _transformer_api(cfg)
+    if fam == "ssm":
+        return _rwkv_api(cfg)
+    if fam == "hybrid":
+        return _hybrid_api(cfg)
+    if fam == "audio":
+        return _encdec_api(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+# -- decoder-only transformer ------------------------------------------------
+
+
+def _transformer_api(cfg: ModelConfig) -> ModelApi:
+    def input_specs(shape: ShapeSpec) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            specs = {"tokens": _token_sds(b, _text_len(cfg, s)),
+                     "labels": _token_sds(b, _text_len(cfg, s))}
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_patches, cfg.d_frontend), jnp.float32)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": _token_sds(b, _text_len(cfg, s)),
+                     "labels": _token_sds(b, _text_len(cfg, s))}
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_patches, cfg.d_frontend), jnp.float32)
+            return specs
+        return {"token": _token_sds(b, 1),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_kind(shape: ShapeSpec) -> dict:
+        ring = shape.name == "long_500k"
+        length = cfg.sliding_window if ring else shape.seq_len
+        return {"length": length, "ring": ring}
+
+    def loss(params, batch, remat=False):
+        return transformer.lm_loss(cfg, params, batch, remat=remat)
+
+    def serve_step(params, cache, token, pos, ring=False):
+        return transformer.serve_step(cfg, params, cache, token, pos,
+                                      ring=ring)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(cfg, key),
+        loss=loss,
+        serve_step=serve_step,
+        init_cache=lambda batch, length, ring, prefill_len=0:
+            transformer.init_cache(cfg, batch, length, ring, prefill_len),
+        input_specs=input_specs,
+        cache_kind=cache_kind,
+    )
+
+
+def _text_len(cfg: ModelConfig, seq: int) -> int:
+    """VLM total context = patches + text; keep the assigned total seq."""
+    if cfg.family == "vlm":
+        return seq - cfg.n_patches
+    return seq
+
+
+# -- rwkv6 -------------------------------------------------------------------
+
+
+def _rwkv_api(cfg: ModelConfig) -> ModelApi:
+    def input_specs(shape: ShapeSpec) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": _token_sds(b, s), "labels": _token_sds(b, s)}
+        return {"token": _token_sds(b, 1),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_kind(shape: ShapeSpec) -> dict:
+        return {"length": 0, "ring": False}   # O(1) recurrent state
+
+    def serve_step(params, state, token, pos, ring=False):
+        return rwkv.serve_step(cfg, params, state, token, pos)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: rwkv.init_lm(cfg, key),
+        loss=lambda params, batch, remat=False:
+            rwkv.lm_loss(cfg, params, batch, remat=remat),
+        serve_step=serve_step,
+        init_cache=lambda batch, length, ring, prefill_len=0:
+            rwkv.init_state(cfg, batch),
+        input_specs=input_specs,
+        cache_kind=cache_kind,
+    )
+
+
+# -- hymba --------------------------------------------------------------------
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelApi:
+    def input_specs(shape: ShapeSpec) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": _token_sds(b, s), "labels": _token_sds(b, s)}
+        return {"token": _token_sds(b, 1),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_kind(shape: ShapeSpec) -> dict:
+        # attention is natively sliding-window: ring cache of window size
+        return {"length": cfg.sliding_window, "ring": True}
+
+    def serve_step(params, cache, token, pos, ring=True):
+        return hybrid.serve_step(cfg, params, cache, token, pos, ring=ring)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: hybrid.init_lm(cfg, key),
+        loss=lambda params, batch, remat=False:
+            hybrid.lm_loss(cfg, params, batch, remat=remat),
+        serve_step=serve_step,
+        init_cache=lambda batch, length, ring, prefill_len=0:
+            hybrid.init_cache(cfg, batch, length, ring, prefill_len),
+        input_specs=input_specs,
+        cache_kind=cache_kind,
+    )
+
+
+# -- whisper -------------------------------------------------------------------
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelApi:
+    def input_specs(shape: ShapeSpec) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        frames = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                      jnp.float32)
+        if shape.kind in ("train", "prefill"):
+            return {"frames": frames, "tokens": _token_sds(b, s),
+                    "labels": _token_sds(b, s)}
+        return {"token": _token_sds(b, 1),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_kind(shape: ShapeSpec) -> dict:
+        return {"length": shape.seq_len, "ring": False}
+
+    def serve_step(params, cache, token, pos, ring=False):
+        return encdec.serve_step(cfg, params, cache, token, pos)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: encdec.init_model(cfg, key),
+        loss=lambda params, batch, remat=False:
+            encdec.lm_loss(cfg, params, batch, remat=remat),
+        serve_step=serve_step,
+        init_cache=lambda batch, length, ring, prefill_len=0:
+            encdec.init_cache(cfg, batch, length, prefill_len),
+        input_specs=input_specs,
+        cache_kind=cache_kind,
+    )
+
+
+# -- spec helpers ---------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, length: int, ring: bool):
+    """Logical-axis specs for the cache pytree (for sharding rules)."""
+    api = get_model(cfg)
+    _, specs = api.init_cache(batch, length, ring)
+    return specs
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))

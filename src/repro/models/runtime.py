@@ -1,0 +1,21 @@
+"""Trace-time model knobs.
+
+SCAN_UNROLL — when True, layer-stack scans fully unroll (lax.scan
+unroll=True). Used by the dry-run depth probes: XLA's cost_analysis counts a
+while-loop body once regardless of trip count, so per-layer cost deltas are
+only measurable on an unrolled module. Time-dimension scans (WKV/SSM) never
+unroll. Default False: production lowering keeps the compact scanned HLO.
+"""
+SCAN_UNROLL = False
+
+
+def layer_scan_unroll():
+    """Value to pass as lax.scan(..., unroll=...) for layer stacks."""
+    return True if SCAN_UNROLL else 1
+
+
+# Attention implementation for full-sequence (train/prefill) paths:
+# "reference" — pure-jnp sdpa (default; what the dry-run lowers today)
+# "flash"     — the Pallas flash-attention kernel (interpret on CPU,
+#               compiled on TPU). Decode paths always use the cache code.
+ATTN_IMPL = "reference"

@@ -1,0 +1,267 @@
+"""RWKV-6 "Finch" — attention-free RNN LM with data-dependent decay.
+
+Faithful structure (arXiv:2404.05892): token-shift ddlerp mixing, low-rank
+data-dependent per-channel decay w_t, bonus u, multi-head WKV state
+S ∈ R^{dk×dv} per head, per-head group-norm, gated output; channel-mix FFN
+with squared-ReLU. The sequential WKV is a ``lax.scan`` here (HLO-compact);
+:mod:`repro.kernels.rwkv6_scan` provides the VMEM-tiled Pallas version.
+
+Decode is O(1) per token: the serve "cache" is the recurrent state
+(x_prev for both mixers + the WKV state), independent of context length —
+this is why rwkv6 runs long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import runtime
+
+Params = dict
+
+LORA_DECAY = 64   # low-rank width of the data-dependent decay
+LORA_MIX = 32     # low-rank width of the ddlerp mixers
+MIX_STREAMS = 5   # w, k, v, r, g
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.ssm.head_dim
+
+
+def init_time_mix(cfg: ModelConfig, key):
+    dtype = L._dtype(cfg.param_dtype)
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = _heads(cfg)
+    ks = L.split_tree(key, 12)
+    p, s = {}, {}
+    # ddlerp: base mixes (5+1 streams) + low-rank data-dependent part
+    p["mu_base"], s["mu_base"] = L.zeros_init((MIX_STREAMS + 1, d),
+                                              ("stream", "embed"), dtype)
+    p["mix_w1"], s["mix_w1"] = L.dense_init(
+        ks[0], (d, MIX_STREAMS * LORA_MIX), ("embed", "mix_lora"), dtype, scale=0.01)
+    p["mix_w2"], s["mix_w2"] = L.dense_init(
+        ks[1], (MIX_STREAMS, LORA_MIX, d), ("stream", "mix_lora", "embed"),
+        dtype, in_axis_sizes=LORA_MIX, scale=0.01)
+    # projections
+    p["w_r"], s["w_r"] = L.dense_init(ks[2], (d, d), ("embed", "inner"), dtype)
+    p["w_k"], s["w_k"] = L.dense_init(ks[3], (d, d), ("embed", "inner"), dtype)
+    p["w_v"], s["w_v"] = L.dense_init(ks[4], (d, d), ("embed", "inner"), dtype)
+    p["w_g"], s["w_g"] = L.dense_init(ks[5], (d, d), ("embed", "inner"), dtype)
+    p["w_o"], s["w_o"] = L.dense_init(ks[6], (d, d), ("inner", "embed"), dtype)
+    # data-dependent decay: w_t = exp(-exp(w0 + tanh(x w1) w2))
+    p["decay_base"], s["decay_base"] = L.zeros_init((d,), ("inner",), dtype)
+    p["decay_w1"], s["decay_w1"] = L.dense_init(
+        ks[7], (d, LORA_DECAY), ("embed", "decay_lora"), dtype, scale=0.01)
+    p["decay_w2"], s["decay_w2"] = L.dense_init(
+        ks[8], (LORA_DECAY, d), ("decay_lora", "inner"), dtype, scale=0.01)
+    p["bonus"], s["bonus"] = L.zeros_init((h, hd), ("heads", "head"), dtype)
+    # per-head group norm
+    p["gn_scale"], s["gn_scale"] = L.ones_init((d,), ("inner",), dtype)
+    p["gn_bias"], s["gn_bias"] = L.zeros_init((d,), ("inner",), dtype)
+    return p, s
+
+
+def init_channel_mix(cfg: ModelConfig, key):
+    dtype = L._dtype(cfg.param_dtype)
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = L.split_tree(key, 3)
+    p, s = {}, {}
+    p["mu_k"], s["mu_k"] = L.zeros_init((d,), ("embed",), dtype)
+    p["mu_r"], s["mu_r"] = L.zeros_init((d,), ("embed",), dtype)
+    p["w_k"], s["w_k"] = L.dense_init(k1, (d, ff), ("embed", "mlp"), dtype)
+    p["w_v"], s["w_v"] = L.dense_init(k2, (ff, d), ("mlp", "embed"), dtype)
+    p["w_r"], s["w_r"] = L.dense_init(k3, (d, d), ("embed", "inner"), dtype)
+    return p, s
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation -> 5 mixed streams."""
+    cdt = x.dtype
+    diff = x_prev - x                                           # (B,S,D)
+    base = x + diff * p["mu_base"][0].astype(cdt)               # stream 0: probe
+    lora = jnp.tanh(jnp.einsum("bsd,dl->bsl", base,
+                               p["mix_w1"].astype(cdt)))
+    lora = lora.reshape(*lora.shape[:-1], MIX_STREAMS, LORA_MIX)
+    delta = jnp.einsum("bsml,mld->bsmd", lora, p["mix_w2"].astype(cdt))
+    mu = p["mu_base"][1:].astype(cdt)[None, None] + delta       # (B,S,5,D)
+    return x[:, :, None, :] + diff[:, :, None, :] * mu          # (B,S,5,D)
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence (reference; Pallas kernel mirrors this).
+
+    r,k,v: (B,S,H,D); w: (B,S,H,D) per-channel decay in (0,1);
+    u: (H,D) bonus; state: (B,H,D,D) [key-dim x value-dim].
+    Returns (out (B,S,H,D), final state). fp32 state for stability.
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                                   # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]                # (B,H,Dk,Dv)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[..., None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32),
+                               (rs, ks, vs, ws))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
+
+
+def time_mix_apply(cfg, p, x, x_prev_last, wkv_state):
+    """x: (B,S,D). x_prev_last: (B,D) state entering this chunk.
+    Returns (y, new_x_prev_last, new_wkv_state)."""
+    cdt = x.dtype
+    b, s_len, d = x.shape
+    h, hd = _heads(cfg), cfg.ssm.head_dim
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    mixed = _ddlerp(p, x, x_prev)                               # (B,S,5,D)
+    xw, xk, xv, xr, xg = (mixed[:, :, i, :] for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(cdt))
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"].astype(cdt))
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"].astype(cdt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"].astype(cdt)))
+    decay = (p["decay_base"].astype(jnp.float32)
+             + jnp.einsum("bsl,ld->bsd",
+                          jnp.tanh(jnp.einsum("bsd,dl->bsl", xw,
+                                              p["decay_w1"].astype(cdt))
+                                   ).astype(jnp.float32),
+                          p["decay_w2"].astype(jnp.float32)))
+    w = jnp.exp(-jnp.exp(decay))                                # (B,S,D) in (0,1)
+
+    rh = r.reshape(b, s_len, h, hd)
+    kh = k.reshape(b, s_len, h, hd)
+    vh = v.reshape(b, s_len, h, hd)
+    wh = w.reshape(b, s_len, h, hd)
+    out, new_state = wkv_scan(rh, kh, vh, wh, p["bonus"], wkv_state)
+    out = out.reshape(b, s_len, d)
+
+    # per-head group norm
+    og = out.reshape(b, s_len, h, hd).astype(jnp.float32)
+    mean = jnp.mean(og, axis=-1, keepdims=True)
+    var = jnp.var(og, axis=-1, keepdims=True)
+    og = (og - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = (og.reshape(b, s_len, d) * p["gn_scale"].astype(jnp.float32)
+           + p["gn_bias"].astype(jnp.float32)).astype(cdt)
+    y = jnp.einsum("bsd,de->bse", out * g, p["w_o"].astype(cdt))
+    return y, x[:, -1, :], new_state
+
+
+def channel_mix_apply(cfg, p, x, x_prev_last):
+    cdt = x.dtype
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    diff = x_prev - x
+    xk = x + diff * p["mu_k"].astype(cdt)
+    xr = x + diff * p["mu_r"].astype(cdt)
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(cdt))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(cdt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(cdt)))
+    return r * kv, x[:, -1, :]
+
+
+def init_block(cfg: ModelConfig, key):
+    k1, k2 = L.split_tree(key, 2)
+    p, s = {}, {}
+    p["ln_time"], s["ln_time"] = L.init_norm(cfg, L._dtype(cfg.param_dtype))
+    p["ln_chan"], s["ln_chan"] = L.init_norm(cfg, L._dtype(cfg.param_dtype))
+    p["time"], s["time"] = init_time_mix(cfg, k1)
+    p["chan"], s["chan"] = init_channel_mix(cfg, k2)
+    return p, s
+
+
+def block_apply(cfg, params, x, state):
+    """state: {"x_time": (B,D), "x_chan": (B,D), "wkv": (B,H,D,D)}"""
+    h = L.apply_norm(cfg, params["ln_time"], x)
+    y, x_time, wkv = time_mix_apply(cfg, params["time"], h,
+                                    state["x_time"], state["wkv"])
+    x = x + y
+    h = L.apply_norm(cfg, params["ln_chan"], x)
+    y, x_chan = channel_mix_apply(cfg, params["chan"], h, state["x_chan"])
+    x = x + y
+    return x, {"x_time": x_time, "x_chan": x_chan, "wkv": wkv}
+
+
+def init_lm(cfg: ModelConfig, key):
+    dtype = L._dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head = L.split_tree(key, 3)
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.dense_init(
+        k_embed, (cfg.vocab, cfg.d_model), ("vocab", "embed"), dtype,
+        in_axis_sizes=cfg.d_model, scale=cfg.d_model**-0.5)
+    p["ln_in"], s["ln_in"] = L.init_norm(cfg, dtype)
+    keys = L.split_tree(k_layers, cfg.n_layers)
+    ps, ss = [], None
+    for i in range(cfg.n_layers):
+        bp, bs = init_block(cfg, keys[i])
+        ps.append(bp)
+        ss = bs
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ps) \
+        if len(ps) > 1 else jax.tree.map(lambda v: v[None], ps[0])
+    p["layers"] = stacked
+    s["layers"] = jax.tree.map(lambda ax: ("layers",) + ax, ss,
+                               is_leaf=lambda v: isinstance(v, tuple))
+    p["ln_f"], s["ln_f"] = L.init_norm(cfg, dtype)
+    p["lm_head"], s["lm_head"] = L.dense_init(
+        k_head, (cfg.d_model, cfg.vocab), ("embed", "vocab"), dtype)
+    return p, s
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    """Recurrent state for all layers (the decode 'cache')."""
+    h, hd = _heads(cfg), cfg.ssm.head_dim
+    cdt = L._dtype(cfg.compute_dtype)
+    one = {
+        "x_time": jnp.zeros((batch, cfg.d_model), cdt),
+        "x_chan": jnp.zeros((batch, cfg.d_model), cdt),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }
+    state = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.n_layers,) + v.shape), one)
+    specs = {
+        "x_time": ("layers", "batch", "embed"),
+        "x_chan": ("layers", "batch", "embed"),
+        "wkv": ("layers", "batch", "heads", "head", "head_v"),
+    }
+    return state, specs
+
+
+def forward(cfg: ModelConfig, params, tokens, state=None, remat=False):
+    """Returns (logits, new_state). state=None -> fresh zeros."""
+    b = tokens.shape[0]
+    if state is None:
+        state, _ = init_state(cfg, b)
+    cdt = L._dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = L.apply_norm(cfg, params["ln_in"], x)
+
+    def body(carry, xs):
+        xv = carry
+        lp, lstate = xs
+        out, nstate = block_apply(cfg, lp, xv, lstate)
+        return out, nstate
+
+    fn = jax.checkpoint(body) if remat else body
+    x, new_state = jax.lax.scan(fn, x, (params["layers"], state),
+                                unroll=runtime.layer_scan_unroll())
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits.astype(L._dtype(cfg.logit_dtype)), new_state
+
+
+def lm_loss(cfg: ModelConfig, params, batch: dict, remat=False):
+    logits, _ = forward(cfg, params, batch["tokens"], remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def serve_step(cfg: ModelConfig, params, state, token, pos=None):
+    """O(1) decode: one token through the recurrent state."""
+    logits, new_state = forward(cfg, params, token, state=state)
+    return logits, new_state

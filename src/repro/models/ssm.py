@@ -1,0 +1,133 @@
+"""Mamba-style selective SSM head (the SSM branch of Hymba layers).
+
+Selective scan: h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t ;  y_t = C_t h_t + D x_t
+with per-token Δ, B, C (data-dependent selectivity, diagonal A). Causal conv
+front, SiLU gate. Reference path is a ``lax.scan``;
+:mod:`repro.kernels.ssm_scan` is the VMEM-tiled Pallas version.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = dict
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+    return d_inner, cfg.ssm.state_dim, dt_rank
+
+
+def init_ssm(cfg: ModelConfig, key):
+    dtype = L._dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_in, n, dt_rank = _dims(cfg)
+    ks = L.split_tree(key, 8)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = L.dense_init(ks[0], (d, 2 * d_in), ("embed", "inner"), dtype)
+    p["conv_w"], s["conv_w"] = L.dense_init(
+        ks[1], (cfg.ssm.conv_width, d_in), ("conv", "inner"), dtype,
+        in_axis_sizes=cfg.ssm.conv_width)
+    p["conv_b"], s["conv_b"] = L.zeros_init((d_in,), ("inner",), dtype)
+    p["w_bcdt"], s["w_bcdt"] = L.dense_init(
+        ks[2], (d_in, 2 * n + dt_rank), ("inner", "state_proj"), dtype)
+    p["dt_proj"], s["dt_proj"] = L.dense_init(
+        ks[3], (dt_rank, d_in), ("dt_rank", "inner"), dtype, scale=dt_rank**-0.5)
+    p["dt_bias"], s["dt_bias"] = L.zeros_init((d_in,), ("inner",), dtype)
+    # A stored as log(-A) for stability: A = -exp(a_log), diagonal (d_in, n)
+    a_init = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                              (d_in, n))
+    p["a_log"], s["a_log"] = a_init.astype(jnp.float32), ("inner", "state")
+    p["d_skip"], s["d_skip"] = L.ones_init((d_in,), ("inner",), jnp.float32)
+    p["w_out"], s["w_out"] = L.dense_init(ks[4], (d_in, d), ("inner", "embed"), dtype)
+    return p, s
+
+
+def selective_scan(x, delta, a, b, c, d_skip, h0):
+    """x,delta: (B,S,Din); a: (Din,N); b,c: (B,S,N); h0: (B,Din,N).
+
+    Returns (y (B,S,Din), h_final). fp32 recurrence.
+    """
+    xf = x.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    da = jnp.exp(df[..., None] * (-jnp.exp(a))[None, None])     # (B,S,Din,N)
+    dbx = df[..., None] * bf[:, :, None, :] * xf[..., None]     # (B,S,Din,N)
+
+    def step(h, inputs):
+        da_t, dbx_t, c_t = inputs
+        h = da_t * h + dbx_t                                    # (B,Din,N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    da_s = jnp.moveaxis(da, 1, 0)
+    dbx_s = jnp.moveaxis(dbx, 1, 0)
+    c_s = jnp.moveaxis(cf, 1, 0)
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), (da_s, dbx_s, c_s))
+    y = jnp.moveaxis(ys, 0, 1) + xf * d_skip[None, None]
+    return y.astype(x.dtype), h
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x: (B,S,Din); w: (K,Din); conv_state: (B,K-1,Din).
+
+    Returns (y, new_conv_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                      # (B,K-1+S,Din)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return y + b[None, None], new_state
+
+
+def ssm_apply(cfg: ModelConfig, p: Params, x, state=None):
+    """x: (B,S,D). state: {"conv": (B,K-1,Din), "h": (B,Din,N)} or None.
+
+    Returns (y (B,S,D), new_state)."""
+    cdt = x.dtype
+    d_in, n, dt_rank = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cdt))
+    xc, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xc, p["conv_w"].astype(cdt),
+                                p["conv_b"].astype(cdt), conv_state)
+    xc = jax.nn.silu(xc)
+    bcdt = jnp.einsum("bse,ep->bsp", xc, p["w_bcdt"].astype(cdt))
+    b_sel = bcdt[..., :n]
+    c_sel = bcdt[..., n:2 * n]
+    dt = bcdt[..., 2 * n:]
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt, p["dt_proj"].astype(cdt)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((x.shape[0], d_in, n), jnp.float32))
+    y, h = selective_scan(xc, delta, p["a_log"], b_sel, c_sel, p["d_skip"], h0)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cdt))
+    new_state = {"h": h}
+    if new_conv is not None:
+        new_state["conv"] = new_conv
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    d_in, n, _ = _dims(cfg)
+    k = cfg.ssm.conv_width
+    cdt = L._dtype(cfg.compute_dtype)
+    state = {
+        "conv": jnp.zeros((batch, k - 1, d_in), cdt),
+        "h": jnp.zeros((batch, d_in, n), jnp.float32),
+    }
+    specs = {
+        "conv": ("batch", "conv", "inner"),
+        "h": ("batch", "inner", "state"),
+    }
+    return state, specs

@@ -1,0 +1,282 @@
+"""Decoder-only transformer LM (dense / MoE / MLA / VLM families).
+
+Layer parameters are stacked along a leading ``layers`` axis and the forward
+pass runs ``lax.scan`` over them — the lowered HLO is depth-independent,
+which keeps the 512-device dry-run compiles fast and matches production
+practice (MaxText does the same).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import runtime
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# one block
+# --------------------------------------------------------------------------
+
+
+def init_block(cfg: ModelConfig, key, layer_idx: int = 0):
+    ks = L.split_tree(key, 4)
+    p, s = {}, {}
+    p["ln_attn"], s["ln_attn"] = L.init_norm(cfg, L._dtype(cfg.param_dtype))
+    p["ln_mlp"], s["ln_mlp"] = L.init_norm(cfg, L._dtype(cfg.param_dtype))
+    if cfg.attn == "mla":
+        p["attn"], s["attn"] = L.init_mla(cfg, ks[0])
+    else:
+        p["attn"], s["attn"] = L.init_attention(cfg, ks[0])
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_dense_layers:
+        p["moe"], s["moe"] = L.init_moe(cfg, ks[1])
+    else:
+        d_ff = (cfg.moe.dense_ff if (cfg.moe is not None and cfg.moe.dense_ff)
+                else cfg.d_ff)
+        p["mlp"], s["mlp"] = L.init_mlp(cfg, ks[1], d_ff=d_ff)
+    return p, s
+
+
+def block_apply(cfg: ModelConfig, params: Params, x, positions, window=0,
+                cache=None, ring=False):
+    """Pre-norm block. Returns (x, new_cache, aux_loss)."""
+    h = L.apply_norm(cfg, params["ln_attn"], x)
+    if cfg.attn == "mla":
+        attn_out, new_cache = L.mla_apply(cfg, params["attn"], h, positions,
+                                          window=window, cache=cache,
+                                          ring=ring)
+    else:
+        attn_out, new_cache = L.attention_apply(cfg, params["attn"], h,
+                                                positions, window=window,
+                                                cache=cache, ring=ring)
+    x = x + attn_out
+    h = L.apply_norm(cfg, params["ln_mlp"], x)
+    if "moe" in params:
+        mlp_out, aux = L.moe_apply(cfg, params["moe"], h)
+    else:
+        mlp_out, aux = L.mlp_apply(cfg, params["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + mlp_out, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+
+def _stack_layers(cfg: ModelConfig, key):
+    """Init all layers and stack leading 'layers' axis (scan-ready).
+
+    MoE models with ``first_dense_layers > 0`` have heterogeneous layers; we
+    split the stack into a dense prefix and a MoE body, each scanned
+    separately.
+    """
+    n_dense_prefix = (cfg.moe.first_dense_layers if cfg.moe is not None else 0)
+    groups = []
+    if n_dense_prefix:
+        groups.append(("prefix", 0, n_dense_prefix))
+    groups.append(("body", n_dense_prefix, cfg.n_layers))
+
+    out_p, out_s = {}, {}
+    keys = L.split_tree(key, cfg.n_layers)
+    for name, lo, hi in groups:
+        ps, ss = [], None
+        for i in range(lo, hi):
+            p, s = init_block(cfg, keys[i], layer_idx=i)
+            ps.append(p)
+            ss = s
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *ps) \
+            if len(ps) > 1 else jax.tree.map(lambda x: x[None], ps[0])
+        out_p[name] = stacked
+        out_s[name] = jax.tree.map(lambda ax: ("layers",) + ax, ss,
+                                   is_leaf=lambda v: isinstance(v, tuple))
+    return out_p, out_s
+
+
+def init_lm(cfg: ModelConfig, key) -> tuple[Params, dict]:
+    dtype = L._dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head, k_proj = L.split_tree(key, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.dense_init(
+        k_embed, (cfg.vocab, cfg.d_model), ("vocab", "embed"), dtype,
+        in_axis_sizes=cfg.d_model, scale=cfg.d_model**-0.5)
+    p["layers"], s["layers"] = _stack_layers(cfg, k_layers)
+    p["ln_f"], s["ln_f"] = L.init_norm(cfg, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"], s["lm_head"] = L.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), ("embed", "vocab"), dtype)
+    if cfg.family == "vlm":
+        # two-layer projector from the (stubbed) vision encoder output
+        kp1, kp2 = L.split_tree(k_proj, 2)
+        p["proj_in"], s["proj_in"] = L.dense_init(
+            kp1, (cfg.d_frontend, cfg.d_model), ("frontend", "embed"), dtype)
+        p["proj_out"], s["proj_out"] = L.dense_init(
+            kp2, (cfg.d_model, cfg.d_model), ("embed", "embed_out"), dtype)
+    return p, s
+
+
+def _embed(cfg: ModelConfig, params, tokens):
+    cdt = L._dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    return x
+
+
+def _project_patches(cfg: ModelConfig, params, patches):
+    cdt = L._dtype(cfg.compute_dtype)
+    h = jnp.einsum("bpf,fd->bpd", patches.astype(cdt),
+                   params["proj_in"].astype(cdt))
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("bpd,de->bpe", h, params["proj_out"].astype(cdt))
+
+
+def _scan_blocks(cfg, stacked, x, positions, window, caches, remat,
+                 ring=False):
+    """Scan each layer group; returns (x, new_caches, aux_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+
+    for name, group in stacked.items():
+        group_cache = caches[name] if caches is not None else None
+
+        def body(carry, xs):
+            xv, aux = carry
+            lp = xs[0]
+            lc = xs[1] if group_cache is not None else None
+            out, nc, a = block_apply(cfg, lp, xv, positions,
+                                     window=window, cache=lc, ring=ring)
+            return (out, aux + a), nc
+
+        fn = jax.checkpoint(body) if remat else body
+        xs = (group,) if group_cache is None else (group, group_cache)
+        (x, aux_total), ncs = jax.lax.scan(
+            fn, (x, aux_total), xs, unroll=runtime.layer_scan_unroll())
+        if caches is not None:
+            new_caches[name] = ncs
+    return x, new_caches, aux_total
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, positions=None,
+            patches=None, window=0, remat=False):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, tokens.shape)
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm forward needs patch embeddings"
+        px = _project_patches(cfg, params, patches)
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+        n_total = x.shape[1]
+        positions = jnp.arange(n_total, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (x.shape[0], n_total))
+    x, _, aux = _scan_blocks(cfg, params["layers"], x, positions, window,
+                             None, remat)
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    ldt = L._dtype(cfg.logit_dtype)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits.astype(ldt), aux
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: dict, remat=False):
+    """Next-token cross entropy (+ MoE aux). batch: tokens, labels[, patches]."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          patches=batch.get("patches"), remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # visual positions carry no LM loss; logits for text tail only
+        logits = logits[:, -labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + aux
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, ring: bool,
+               prefill_len: int = 0):
+    """Stacked per-layer caches matching the layer groups."""
+    maker = L.init_mla_cache if cfg.attn == "mla" else L.init_kv_cache
+    groups = {}
+    specs = {}
+    n_dense_prefix = (cfg.moe.first_dense_layers if cfg.moe is not None else 0)
+    sizes = {}
+    if n_dense_prefix:
+        sizes["prefix"] = n_dense_prefix
+    sizes["body"] = cfg.n_layers - n_dense_prefix
+    for name, n in sizes.items():
+        c, cs = maker(cfg, batch, length, ring, prefill_len)
+        groups[name] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape) if
+            isinstance(x, jax.Array) else x, c,
+            is_leaf=lambda v: not isinstance(v, dict))
+        specs[name] = jax.tree.map(
+            lambda ax: (("layers",) + ax) if isinstance(ax, tuple) else ax, cs,
+            is_leaf=lambda v: isinstance(v, tuple) or v is None or v is True)
+    return groups, specs
+
+
+def serve_step(cfg: ModelConfig, params: Params, cache, token, pos,
+               ring: bool = False):
+    """Decode one token. token: (B, 1) int32; pos: () int32 absolute position.
+
+    ``ring`` (static) means the cache buffers hold only the last W positions
+    (sliding-window long-context decode). Returns (logits (B,1,V), new_cache).
+    """
+    x = _embed(cfg, params, token)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(jnp.reshape(pos, (1, 1)),
+                                     (token.shape[0], 1))
+    else:                      # (B,): continuous batching, per-slot depth
+        positions = pos[:, None]
+    window = cfg.sliding_window if ring else 0
+    x, new_cache, _ = _scan_blocks(cfg, params["layers"], x, positions,
+                                   window, cache, remat=False, ring=ring)
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits.astype(L._dtype(cfg.logit_dtype)), new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, cache_length: int,
+            patches=None):
+    """Run the prompt through the model, building a full-buffer cache.
+
+    Implemented as full forward (teacher-forced) followed by cache writes via
+    a scan of single-token decodes would be O(S) scans; instead we compute
+    K/V for all positions in one pass per layer — reusing block_apply with a
+    preallocated cache is equivalent; for simplicity and testability we build
+    the cache by running attention in full mode and capturing K/V.
+
+    For the dry-run we only need ``serve_step`` (decode shapes); prefill
+    here supports the serving example and parity tests by replaying tokens
+    through serve_step under ``lax.scan``.
+    """
+    b, s = tokens.shape
+    cache, _ = init_cache(cfg, batch=b, length=cache_length, ring=False)
+
+    def step(carry, tok_pos):
+        c = carry
+        tok, p = tok_pos
+        logits, c = serve_step(cfg, params, c, tok[:, None], p)
+        return c, logits[:, 0]
+
+    toks = jnp.moveaxis(tokens, 1, 0)                      # (S, B)
+    poss = jnp.arange(s, dtype=jnp.int32)
+    cache, logits = jax.lax.scan(step, cache, (toks, poss))
+    return cache, jnp.moveaxis(logits, 0, 1)               # (B, S, V)

@@ -1,0 +1,4 @@
+"""From-scratch optimizers (no optax offline): SGD(+momentum) and AdamW."""
+from repro.optim.base import Optimizer, apply_updates, clip_by_global_norm
+from repro.optim.sgd import sgd
+from repro.optim.adam import adamw

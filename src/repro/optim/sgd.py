@@ -1,0 +1,27 @@
+"""SGD with optional momentum — the paper's local optimizer (E epochs/round)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+__all__ = ["sgd"]
+
+
+def sgd(lr: float = 0.01, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+        updates = jax.tree.map(lambda m: -lr * m, mu)
+        return updates, {"mu": mu}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,46 @@
+"""Launch-driver smoke tests: train.py and serve.py run end to end on
+reduced configs in a subprocess (clean jax device state)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+ENV.pop("XLA_FLAGS", None)
+
+
+def _run(args, timeout=420):
+    return subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                          text=True, env=ENV, timeout=timeout, cwd=REPO)
+
+
+@pytest.mark.slow
+def test_train_driver_gemma_reduced(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "gemma-2b", "--reduced",
+                "--steps", "4", "--batch", "2", "--seq", "32",
+                "--n-clients", "2", "--ckpt-dir", str(tmp_path)])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "participation p=" in out.stdout
+    assert "loss" in out.stdout
+    assert any(f.startswith("ckpt_") for f in os.listdir(tmp_path))
+
+
+@pytest.mark.slow
+def test_serve_driver_rwkv_reduced():
+    out = _run(["repro.launch.serve", "--arch", "rwkv6-3b", "--reduced",
+                "--batch", "2", "--prompt-len", "4", "--gen", "8"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "generated 8 toks" in out.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_driver_single_combo(tmp_path):
+    out = _run(["repro.launch.dryrun", "--arch", "whisper-tiny",
+                "--shape", "decode_32k", "--out", str(tmp_path)],
+               timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "[OK ]" in out.stdout
+    files = os.listdir(tmp_path)
+    assert len(files) == 1 and files[0].endswith(".json")

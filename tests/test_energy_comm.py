@@ -1,0 +1,100 @@
+"""Energy model (eqs. 1-7), 802.11ax airtime, AoI (eq. 10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+from repro.core.aoi import expected_aoi, simulate_aoi
+from repro.core.comm80211ax import PAPER_COMM, airtime_model
+from repro.core.energy import (EnergyLedger, EnergyParams, PAPER_MODEL_BYTES,
+                               calibrate_from_table, expected_round_energy,
+                               round_energy, task_energy)
+
+
+def test_airtime_scales_with_payload():
+    a1 = airtime_model(1e6)
+    a2 = airtime_model(2e6)
+    assert a2["t_tx_s"] > a1["t_tx_s"]
+    # asymptotically linear
+    assert a2["t_data_s"] == pytest.approx(2 * a1["t_data_s"], rel=1e-3)
+
+
+def test_airtime_reasonable_goodput():
+    """20 MHz 802.11ax single stream: goodput well below PHY peak, above 50."""
+    a = airtime_model(PAPER_MODEL_BYTES)
+    assert 50 < a["goodput_mbps"] < 300
+    # uploading 44.73 MB takes seconds, not ms or hours
+    assert 1.0 < a["t_tx_s"] < 30.0
+
+
+def test_tx_power_dbm_conversion():
+    a = airtime_model(1e6, PAPER_COMM)
+    assert a["tx_power_w"] == pytest.approx(10 ** (9 / 10) * 1e-3)
+
+
+def test_round_energy_decomposition():
+    ep = EnergyParams()
+    n = 10
+    mask = jnp.asarray([1, 0, 1, 0, 0, 0, 0, 0, 0, 0], bool)
+    e = float(round_energy(mask, ep))
+    want = 2 * ep.e_participant_j + 8 * ep.e_idle_j
+    assert e == pytest.approx(want)
+
+
+def test_expected_round_energy_is_linear_in_p():
+    ep = EnergyParams()
+    p = jnp.full((50,), 0.5)
+    mid = float(expected_round_energy(p, ep))
+    lo = float(expected_round_energy(jnp.zeros(50), ep))
+    hi = float(expected_round_energy(jnp.ones(50), ep))
+    assert mid == pytest.approx(0.5 * (lo + hi), rel=1e-12)
+
+
+def test_participant_energy_exceeds_idle():
+    ep = EnergyParams()
+    assert ep.e_participant_j > ep.e_idle_j
+    assert ep.e_tx_j > 0
+
+
+def test_ledger_accumulates():
+    ep = EnergyParams()
+    led = EnergyLedger.create(4)
+    m1 = jnp.asarray([1, 1, 0, 0], bool)
+    m2 = jnp.asarray([1, 0, 0, 0], bool)
+    led = led.record_round(m1, ep).record_round(m2, ep)
+    assert int(led.rounds) == 2
+    np.testing.assert_array_equal(np.asarray(led.participation_counts),
+                                  [2, 1, 0, 0])
+    want = float(round_energy(m1, ep) + round_energy(m2, ep))
+    assert float(led.total_j) == pytest.approx(want)
+
+
+def test_calibration_matches_table_scale():
+    """Calibrated params reproduce Table II(b) energies within ~12%."""
+    from repro.core.duration import PAPER_TABLE_II
+    ep = calibrate_from_table()
+    assert 100 < ep.p_hw_w < 500     # a plausible GPU-node training power
+    tab = PAPER_TABLE_II
+    pred = tab[:, 1] * (50 * ep.e_idle_j
+                        + 50 * tab[:, 0] * (ep.e_participant_j - ep.e_idle_j)
+                        ) / 3600.0
+    rel = np.abs(pred - tab[:, 3]) / tab[:, 3]
+    assert float(np.median(rel)) < 0.12
+
+
+def test_task_energy_sums_rounds():
+    e = task_energy(jnp.asarray([1.0, 2.0, 3.5]))
+    assert float(e) == pytest.approx(6.5)
+
+
+def test_aoi_closed_form():
+    for p in [0.1, 0.5, 0.9]:
+        assert float(expected_aoi(jnp.asarray(p))) == pytest.approx(
+            1.0 / p - 0.5)
+
+
+def test_aoi_matches_simulation():
+    p = 0.35
+    sim = float(simulate_aoi(p, 400_000, jax.random.PRNGKey(0)))
+    assert sim == pytest.approx(1.0 / p - 0.5, rel=3e-2)

@@ -1,0 +1,98 @@
+"""NE solver, centralized optimum, PoA (paper eqs. 11-13 + §IV claims)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.duration import paper_duration_model
+from repro.core.game import (best_response, centralized_optimum, own_marginal,
+                             solve_game, solve_symmetric_ne)
+from repro.core.utility import UtilityParams, symmetric_player_utility
+
+
+@pytest.fixture(scope="module")
+def dur():
+    return paper_duration_model()
+
+
+def test_ne_is_root_of_marginal(dur):
+    up = UtilityParams(gamma=0.6, cost=2.0, n_nodes=50)
+    nes = solve_symmetric_ne(up, dur)
+    phi = own_marginal(up, dur)
+    for p in nes:
+        if 0.002 < p < 0.999:  # interior
+            assert abs(float(phi(jnp.asarray(p)))) < 1e-4
+
+
+def test_ne_no_profitable_deviation(dur):
+    """Global best-response check on the solved equilibria."""
+    up = UtilityParams(gamma=0.6, cost=2.0, n_nodes=50)
+    nes = solve_symmetric_ne(up, dur)
+    assert nes
+    for p_star in nes:
+        u_eq = float(symmetric_player_utility(jnp.asarray(p_star),
+                                              jnp.asarray(p_star), up, dur))
+        br, u_br = best_response(p_star, up, dur)
+        assert u_br <= u_eq + 1e-6, (p_star, br, u_br, u_eq)
+
+
+def test_centralized_beats_ne_cost(dur):
+    from repro.core.utility import social_cost
+    up = UtilityParams(gamma=0.0, cost=2.0, n_nodes=50)
+    sol = solve_game(up, dur)
+    for c_ne in sol.ne_costs:
+        assert c_ne >= sol.opt_cost - 1e-9
+    assert sol.poa >= 1.0
+
+
+def test_poa_increases_with_cost(dur):
+    poas = []
+    for c in [0.5, 2.0, 8.0]:
+        sol = solve_game(UtilityParams(gamma=0.0, cost=c, n_nodes=50), dur)
+        poas.append(sol.poa)
+    assert poas[0] <= poas[1] <= poas[2]
+
+
+def test_incentive_improves_poa(dur):
+    """Paper Fig. 6: AoI incentive keeps PoA lower at matched cost."""
+    c = 3.0
+    no_inc = solve_game(UtilityParams(gamma=0.0, cost=c, n_nodes=50), dur)
+    inc = solve_game(UtilityParams(gamma=0.6, cost=c, n_nodes=50), dur)
+    assert inc.poa <= no_inc.poa + 1e-9
+
+
+def test_incentive_raises_participation(dur):
+    """Paper Fig. 4: with gamma=0.6 the NE participation is higher."""
+    c = 3.0
+    ne0 = solve_symmetric_ne(UtilityParams(gamma=0.0, cost=c, n_nodes=50), dur)
+    ne1 = solve_symmetric_ne(UtilityParams(gamma=0.6, cost=c, n_nodes=50), dur)
+    assert max(ne1) >= max(ne0)
+
+
+def test_paper_claims_band(dur):
+    """Quantitative reproduction bands for the §IV headline numbers."""
+    # centralized optimum near p ~ 0.61 (paper) — accept 0.55..0.75
+    opt_p, _ = centralized_optimum(UtilityParams(gamma=0.0, cost=0.0,
+                                                 n_nodes=50), dur)
+    assert 0.55 <= opt_p <= 0.75, opt_p
+    # the tragedy basin: low-participation NE around p ~ 0.24 at small c
+    sol = solve_game(UtilityParams(gamma=0.0, cost=1.5, n_nodes=50), dur)
+    assert sol.equilibria and min(sol.equilibria) < 0.35
+    # PoA ~ 1.28 (paper) at the small-c operating point — accept 1.1..1.5
+    assert 1.1 <= sol.poa <= 1.5, sol.poa
+    # with the AoI incentive the NE keeps p high and PoA near 1
+    sol_inc = solve_game(UtilityParams(gamma=0.6, cost=1.5, n_nodes=50), dur)
+    assert max(sol_inc.equilibria) > 0.45
+    assert sol_inc.poa < sol.poa
+
+
+def test_collapse_at_high_cost(dur):
+    """Tragedy of the Commons: p -> 0 as c grows without incentive."""
+    sol = solve_game(UtilityParams(gamma=0.0, cost=60.0, n_nodes=50), dur)
+    assert min(sol.equilibria) <= 0.01
+
+
+def test_incentive_never_collapses(dur):
+    """Paper: NE with incentive 'never reaches p = 0'."""
+    sol = solve_game(UtilityParams(gamma=0.6, cost=60.0, n_nodes=50), dur)
+    assert max(sol.equilibria) > 0.01

@@ -1,0 +1,215 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fedavg_agg import fedavg_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.ssm_scan import ssm_scan
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 128, 4, 4, 64),
+    (2, 256, 8, 2, 64),
+    (1, 192, 6, 1, 32),       # ragged seq + MQA
+    (2, 96, 4, 4, 128),       # ragged, wide head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, s, h, kv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (b, s, h, d), dtype)
+    k = _rand(ks[1], (b, s, kv, d), dtype)
+    v = _rand(ks[2], (b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q.astype(jnp.float32),
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_attention_sliding_window(window):
+    b, s, h, d = 1, 256, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (b, s, h, d), jnp.float32)
+    k = _rand(ks[1], (b, s, h, d), jnp.float32)
+    v = _rand(ks[2], (b, s, h, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    b, s, h, d = 2, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (_rand(kk, (b, s, h, d), jnp.float32) for kk in ks)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,d,bt", [
+    (1, 64, 2, 32, 16),
+    (2, 100, 3, 64, 32),      # ragged time
+    (1, 32, 1, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(b, s, h, d, bt, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = _rand(ks[0], (b, s, h, d), dtype, 0.5)
+    k = _rand(ks[1], (b, s, h, d), dtype, 0.5)
+    v = _rand(ks[2], (b, s, h, d), dtype, 0.5)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, d))) \
+        .astype(dtype) * 0.5 + 0.45
+    u = _rand(ks[4], (h, d), dtype, 0.1)
+    out, st = rwkv6_scan(r, k, v, w, u, block_t=bt, interpret=True)
+    want, st_want = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_want),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("bsz,s,din,n,bt,bd", [
+    (1, 48, 32, 8, 16, 32),
+    (2, 64, 50, 16, 32, 32),   # ragged channels
+    (1, 100, 32, 4, 32, 16),   # ragged time
+])
+def test_ssm_scan(bsz, s, din, n, bt, bd):
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    x = _rand(ks[0], (bsz, s, din), jnp.float32)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, din)))
+    a_log = _rand(ks[2], (din, n), jnp.float32, 0.5)
+    b = _rand(ks[3], (bsz, s, n), jnp.float32)
+    c = _rand(ks[4], (bsz, s, n), jnp.float32)
+    d_skip = _rand(ks[5], (din,), jnp.float32)
+    y, h = ssm_scan(x, delta, a_log, b, c, d_skip, block_t=bt, block_d=bd,
+                    interpret=True)
+    y_want, h_want = ref.ssm_scan_ref(x, delta, a_log, b, c, d_skip)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_want), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_want), atol=2e-4)
+
+
+@pytest.mark.parametrize("n,p,bp", [(4, 1000, 256), (50, 4096, 2048),
+                                    (7, 999, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_agg(n, p, bp, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    g = _rand(ks[0], (p,), dtype)
+    cf = _rand(ks[1], (n, p), dtype)
+    mask = jax.random.bernoulli(ks[2], 0.5, (n,))
+    out = fedavg_agg(g, cf, mask, block_p=bp, interpret=True)
+    want = ref.fedavg_agg_ref(g, cf, mask)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_fedavg_agg_empty_round_keeps_global():
+    g = jnp.arange(100.0)
+    cf = jnp.ones((5, 100))
+    out = fedavg_agg(g, cf, jnp.zeros((5,), bool), block_p=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g))
+
+
+def test_fedavg_pytree_wrapper():
+    from repro.federated.server import fedavg_merge
+    from repro.kernels.ops import fedavg_merge_pallas
+    key = jax.random.PRNGKey(6)
+    g = {"a": jax.random.normal(key, (13, 7)), "b": jnp.ones((5,))}
+    c = jax.tree.map(lambda x: jnp.stack([x + i for i in range(4)]), g)
+    mask = jnp.asarray([1, 0, 1, 1], bool)
+    want = fedavg_merge(g, c, mask)
+    got = fedavg_merge_pallas(g, c, mask)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-5)
+
+
+def test_flash_attention_integrated_in_model():
+    """Model forward with runtime.ATTN_IMPL='flash' matches the reference
+    path end to end (stablelm: plain causal; hymba: sliding-window)."""
+    from repro.configs import ARCHITECTURES
+    from repro.models import runtime
+    from repro.models import transformer as T
+    from repro.models import hybrid as H
+    from repro.models.registry import get_model
+
+    for name, fwd in (("stablelm-3b", lambda cfg, p, t: T.forward(cfg, p, t)[0]),
+                      ("hymba-1.5b", lambda cfg, p, t: H.forward(cfg, p, t))):
+        cfg = ARCHITECTURES[name].reduced()
+        api = get_model(cfg)
+        params, _ = api.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                    cfg.vocab)
+        runtime.ATTN_IMPL = "reference"
+        ref_out = fwd(cfg, params, tokens)
+        try:
+            runtime.ATTN_IMPL = "flash"
+            flash_out = fwd(cfg, params, tokens)
+        finally:
+            runtime.ATTN_IMPL = "reference"
+        np.testing.assert_allclose(np.asarray(flash_out),
+                                   np.asarray(ref_out), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("t,d,v,bt,bv", [
+    (64, 32, 100, 16, 32),
+    (100, 48, 257, 32, 64),     # ragged tokens + ragged vocab
+    (128, 64, 512, 128, 512),   # single-tile fast path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ce(t, d, v, bt, bv, dtype):
+    from repro.kernels.fused_ce import fused_ce
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    h = _rand(ks[0], (t, d), dtype)
+    w = _rand(ks[1], (d, v), dtype, d ** -0.5)
+    lab = jax.random.randint(ks[2], (t,), 0, v)
+    out = fused_ce(h, w, lab, block_t=bt, block_v=bv, interpret=True)
+    want = ref.fused_ce_ref(h.astype(jnp.float32), w.astype(jnp.float32),
+                            lab)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 3e-5,
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 3e-5)
+
+
+def test_fused_ce_matches_model_loss():
+    """Fused CE reproduces the model's lm_loss on a reduced config."""
+    from repro.configs import ARCHITECTURES
+    from repro.kernels.ops import cross_entropy
+    from repro.models import layers as L
+    from repro.models import transformer as T
+    from repro.models.registry import get_model
+
+    cfg = ARCHITECTURES["phi4-mini-3.8b"].reduced()
+    api = get_model(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    labels = jnp.roll(tokens, -1, axis=1)
+    want = float(api.loss(params, {"tokens": tokens, "labels": labels}))
+    # recompute via hidden states + fused kernel
+    logits, _ = T.forward(cfg, params, tokens)
+    del logits
+    # reconstruct final hidden: forward without the head
+    x = T._embed(cfg, params, tokens)
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None], (2, 16))
+    x, _, _ = T._scan_blocks(cfg, params["layers"], x, pos, 0, None, False)
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    nll = cross_entropy(x.reshape(-1, cfg.d_model).astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32),
+                        labels.reshape(-1), block_t=16, block_v=128)
+    got = float(jnp.mean(nll))
+    assert abs(got - want) < 2e-4, (got, want)

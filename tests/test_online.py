@@ -1,0 +1,67 @@
+"""Online duration learning + adaptive controller loop (core/online.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.online import OnlineDurationEstimator
+from repro.core.game import solve_symmetric_ne
+from repro.core.utility import UtilityParams
+
+
+def _true_rate(k, a=0.005, b=0.06, s=6.0):
+    return a + b * k / (k + s)
+
+
+def test_estimator_recovers_rate_curve():
+    est = OnlineDurationEstimator(n_nodes=20, saturation=6.0)
+    rng = np.random.default_rng(0)
+    for _ in range(400):
+        k = int(rng.integers(1, 21))
+        prog = _true_rate(k) * float(rng.lognormal(0.0, 0.2))
+        est.observe(k, prog)
+    ks = np.array([2, 5, 10, 20])
+    got = est.progress_rate(ks)
+    want = _true_rate(ks)
+    assert np.all(np.abs(got - want) / want < 0.25), (got, want)
+
+
+def test_duration_model_monotone_and_capped():
+    est = OnlineDurationEstimator(n_nodes=20, saturation=6.0)
+    for k in range(1, 21):
+        for _ in range(10):
+            est.observe(k, _true_rate(k))
+    dm = est.duration_model()
+    tab = np.asarray(dm.table())
+    assert tab[0] == est.horizon           # no participants -> never
+    assert tab[1] > tab[20]                # more participants -> fewer rounds
+    assert np.all(tab >= 1.0)
+
+
+def test_adaptive_ne_tracks_task_difficulty():
+    """A harder task (lower progress rates) pushes the NE participation up —
+    the controller re-solves and asks for more help."""
+    ps = {}
+    for name, scale in (("easy", 2.0), ("hard", 0.5)):
+        est = OnlineDurationEstimator(n_nodes=20, saturation=6.0)
+        for k in range(1, 21):
+            for _ in range(20):
+                est.observe(k, _true_rate(k) * scale)
+        dm = est.duration_model()
+        nes = solve_symmetric_ne(
+            UtilityParams(gamma=0.6, cost=4.0, n_nodes=20), dm,
+            grid_size=300)
+        ps[name] = max(nes) if nes else 0.0
+    assert ps["hard"] >= ps["easy"], ps
+
+
+def test_estimator_feeds_controller():
+    est = OnlineDurationEstimator(n_nodes=50)
+    for k in range(1, 51, 2):
+        est.observe(k, _true_rate(k, s=10.0))
+    dm = est.duration_model()
+    ctrl = C.ParticipationController(n_nodes=50, gamma=0.6, cost=1.0,
+                                     duration_model=dm)
+    p = ctrl.participation_probability()
+    assert 0.0 < p <= 1.0
+    assert np.isfinite(ctrl.diagnostics()["poa"])

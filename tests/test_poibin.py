@@ -1,0 +1,77 @@
+"""Poisson-Binomial pmf (paper eq. 9) and expected duration (eq. 8)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.poibin import (expected_duration, poibin_mean, poibin_pmf,
+                               poibin_pmf_recursive, symmetric_pmf)
+
+
+def brute_force_pmf(p):
+    n = len(p)
+    pmf = np.zeros(n + 1)
+    for bits in itertools.product([0, 1], repeat=n):
+        prob = 1.0
+        for b, pi in zip(bits, p):
+            prob *= pi if b else (1 - pi)
+        pmf[sum(bits)] += prob
+    return pmf
+
+
+@pytest.mark.parametrize("p", [
+    [0.5], [0.2, 0.8], [0.1, 0.5, 0.9], [0.3, 0.3, 0.3, 0.3],
+    [0.05, 0.2, 0.45, 0.7, 0.99],
+])
+def test_pmf_matches_brute_force(p):
+    got = np.asarray(poibin_pmf(jnp.asarray(p)))
+    want = brute_force_pmf(p)
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+def test_pmf_matches_recursion_large_n():
+    rng = np.random.default_rng(0)
+    p = rng.uniform(0.01, 0.99, size=50)
+    dft = np.asarray(poibin_pmf(jnp.asarray(p)))
+    rec = np.asarray(poibin_pmf_recursive(jnp.asarray(p)))
+    np.testing.assert_allclose(dft, rec, atol=1e-10)
+
+
+def test_pmf_normalizes_and_mean():
+    p = jnp.asarray([0.12, 0.5, 0.77, 0.3, 0.9, 0.05])
+    pmf = poibin_pmf(p)
+    assert float(jnp.sum(pmf)) == pytest.approx(1.0, abs=1e-12)
+    mean = float(jnp.sum(pmf * jnp.arange(7)))
+    assert mean == pytest.approx(float(poibin_mean(p)), abs=1e-10)
+
+
+def test_symmetric_is_binomial():
+    from scipy import stats
+    n, p = 50, 0.37
+    got = np.asarray(symmetric_pmf(jnp.asarray(p), n))
+    want = stats.binom.pmf(np.arange(n + 1), n, p)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_expected_duration_monte_carlo():
+    rng = np.random.default_rng(1)
+    p = jnp.asarray(rng.uniform(0.1, 0.9, size=12))
+    d_of_k = jnp.asarray(100.0 / (1.0 + np.arange(13)))
+    analytic = float(expected_duration(p, d_of_k))
+    draws = rng.random((200_000, 12)) < np.asarray(p)
+    k = draws.sum(axis=1)
+    mc = float(np.mean(np.asarray(d_of_k)[k]))
+    assert analytic == pytest.approx(mc, rel=2e-2)
+
+
+def test_gradient_flows_through_pmf():
+    def f(p):
+        return expected_duration(p, jnp.arange(4.0))
+
+    g = jax.grad(f)(jnp.asarray([0.3, 0.5, 0.7]))
+    assert np.all(np.isfinite(np.asarray(g)))
+    # E[D] = E[k] here, so gradient wrt each p_i is exactly 1
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-8)

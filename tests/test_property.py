@@ -1,0 +1,133 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401
+from repro.core.aoi import expected_aoi
+from repro.core.energy import EnergyParams, expected_round_energy
+from repro.core.poibin import poibin_pmf, poibin_pmf_recursive
+from repro.federated.server import fedavg_merge
+from repro.kernels.ref import fedavg_agg_ref
+
+probs = st.lists(st.floats(0.0, 1.0, allow_nan=False), min_size=1,
+                 max_size=24)
+
+
+@settings(max_examples=30, deadline=None)
+@given(probs)
+def test_poibin_pmf_is_distribution(p):
+    pmf = np.asarray(poibin_pmf(jnp.asarray(p)))
+    assert pmf.shape == (len(p) + 1,)
+    assert np.all(pmf >= -1e-12)
+    assert abs(pmf.sum() - 1.0) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(probs)
+def test_poibin_dft_equals_recursion(p):
+    dft = np.asarray(poibin_pmf(jnp.asarray(p)))
+    rec = np.asarray(poibin_pmf_recursive(jnp.asarray(p)))
+    np.testing.assert_allclose(dft, rec, atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+def test_fedavg_equals_subset_mean(n_clients, dim, seed):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(dim,)), jnp.float32)}
+    c = {"w": jnp.asarray(rng.normal(size=(n_clients, dim)), jnp.float32)}
+    mask = jnp.asarray(rng.integers(0, 2, n_clients), bool)
+    out = np.asarray(fedavg_merge(g, c, mask)["w"])
+    sel = np.asarray(c["w"])[np.asarray(mask)]
+    want = sel.mean(axis=0) if sel.size else np.asarray(g["w"])
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_fedavg_kernel_ref_matches_tree_merge(n_clients, dim, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(dim,)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n_clients, dim)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, n_clients), bool)
+    a = np.asarray(fedavg_agg_ref(g, c, mask))
+    b = np.asarray(fedavg_merge({"w": g}, {"w": c}, mask)["w"])
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e-4, 1.0, allow_nan=False))
+def test_aoi_monotone_decreasing(p):
+    """More participation -> lower age, always >= 1/2."""
+    a = float(expected_aoi(jnp.asarray(p)))
+    a2 = float(expected_aoi(jnp.asarray(min(1.0, p * 1.5))))
+    assert a >= a2 - 1e-9
+    assert a >= 0.5 - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=20))
+def test_round_energy_monotone_in_p(p):
+    ep = EnergyParams()
+    base = float(expected_round_energy(jnp.asarray(p), ep))
+    more = float(expected_round_energy(jnp.minimum(jnp.asarray(p) + 0.1, 1.0),
+                                       ep))
+    assert more >= base - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.95))
+def test_expected_duration_bounds(seed, p):
+    """E[D] lies within [min d, max d] of the duration table."""
+    from repro.core.duration import paper_duration_model
+    from repro.core.poibin import expected_duration
+    dm = paper_duration_model()
+    tab = dm.table()
+    n = dm.n_nodes
+    ed = float(expected_duration(jnp.full((n,), p), tab))
+    assert float(jnp.min(tab)) - 1e-9 <= ed <= float(jnp.max(tab)) + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([32, 48, 64]),
+       st.sampled_from([1, 2, 4]), st.sampled_from([16, 32]),
+       st.integers(0, 2 ** 31 - 1))
+def test_flash_attention_matches_sdpa(b, s, h, d, seed):
+    """Property: the Pallas flash kernel equals reference attention for
+    random (small) shapes, including non-tile-aligned sequence lengths."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 30), st.floats(0.5, 10.0), st.floats(0.0, 1.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_heterogeneous_br_never_profitable_to_deviate(n, cost_hi, gamma,
+                                                      seed):
+    """Property: Gauss-Seidel BR dynamics land on profiles where no sampled
+    unilateral deviation is profitable beyond solver tolerance."""
+    from repro.core.asymmetric import HeterogeneousGame, best_response_dynamics
+    from repro.core.duration import theoretical_duration
+    rng = np.random.default_rng(seed)
+    dur = theoretical_duration(n_nodes=n, d_inf=30.0, slope=6.0)
+    costs = jnp.asarray(rng.uniform(0.1, cost_hi, n))
+    game = HeterogeneousGame(costs=costs, gammas=jnp.full((n,), gamma),
+                             dur=dur)
+    p, conv, _ = best_response_dynamics(game, damping=0.6, max_iters=120)
+    if not conv:
+        return  # dynamics may cycle for gamma=0 bang-bang games; skip
+    i = int(rng.integers(0, n))
+    u_eq = float(game.utility(p, i))
+    for q in np.linspace(1e-3, 1.0, 9):
+        assert float(game.utility(p.at[i].set(float(q)), i)) <= u_eq + 1e-3

@@ -1,0 +1,193 @@
+"""Sharding rules engine + dry-run plumbing + multi-device numerics.
+
+The multi-device test spawns a subprocess with
+``--xla_force_host_platform_device_count=8`` (jax locks device count at
+first init, and the main test process must keep seeing 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.sharding import (DECODE_RULES, TRAIN_RULES, Rules,
+                                   resolve_one, resolve_specs)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mesh_1d():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_resolve_divisible_and_relaxed():
+    mesh = _mesh_1d()  # sizes 1 -> everything replicates but records nothing
+    rules = Rules(table=dict(TRAIN_RULES.table))
+    spec = resolve_one((1024, 16, 64), ("embed", "heads", "head"), mesh, rules)
+    assert spec == P()
+
+
+def test_resolve_uses_first_divisible_candidate():
+    # fake 4x2 mesh from 1 device repeated is illegal; instead test the
+    # divisibility logic through a pure-Python mesh stub
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    rules = Rules(table={"heads": ["model", None], "batch": [("data",)]})
+    spec = resolve_one((6, 8), ("heads", "batch"), FakeMesh(), rules)
+    # heads=6 divisible by model=2 -> sharded; batch=8 by data=4 -> sharded
+    assert spec == P("model", "data")
+    spec2 = resolve_one((5, 7), ("heads", "batch"), FakeMesh(), rules)
+    assert spec2 == P()
+    assert any("heads" in r for r in rules.relaxations)
+
+
+def test_no_mesh_axis_reuse_within_array():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 4}
+
+    rules = Rules(table={"a": ["model"], "b": ["model"]})
+    spec = resolve_one((8, 8), ("a", "b"), FakeMesh(), rules)
+    assert spec == P("model")  # second dim must not reuse 'model'
+
+
+def test_pod_axis_filtered_on_single_pod():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    rules = Rules(table={"batch": [("pod", "data")]})
+    spec = resolve_one((256, 128), ("batch", "seq"), FakeMesh(), rules)
+    assert spec == P("data")
+
+
+def test_dryrun_artifacts_exist_and_pass():
+    """The background sweep must have produced 78 OK artifacts (39 pairs x
+    2 meshes). This asserts the committed artifacts, not a recompile."""
+    art_dir = os.path.join(REPO, "experiments", "dryrun")
+    if not os.path.isdir(art_dir):
+        pytest.skip("dry-run artifacts not generated yet")
+    files = [f for f in os.listdir(art_dir) if f.endswith(".json")]
+    assert len(files) >= 78, f"expected >= 78 artifacts, got {len(files)}"
+    bad = []
+    for f in files:
+        with open(os.path.join(art_dir, f)) as fh:
+            d = json.load(fh)
+        if not d.get("ok"):
+            bad.append(f)
+    assert not bad, f"failed dry-runs: {bad}"
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+    hlo = textwrap.dedent("""
+      %all-reduce.1 = f32[128,256] all-reduce(f32[128,256] %x), replica_groups={}
+      %ag = bf16[16,512] all-gather(bf16[16,64] %y), dimensions={1}
+      %rs.2 = f32[64] reduce-scatter(f32[512] %z), dimensions={0}
+      %add.3 = f32[128] add(f32[128] %a, f32[128] %b)
+    """)
+    res = parse_collectives(hlo)
+    assert res["all-reduce"]["count"] == 1
+    assert res["all-reduce"]["bytes"] == 128 * 256 * 4
+    assert res["all-gather"]["count"] == 1
+    assert res["all-gather"]["bytes"] == 16 * 512 * 2
+    assert res["reduce-scatter"]["count"] == 1
+    assert res["reduce-scatter"]["bytes"] == 64 * 4
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    """pjit train step on a 4x2 CPU mesh == single-device numerics."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import ARCHITECTURES
+        from repro.models.registry import get_model
+        from repro.launch.sharding import TRAIN_RULES, Rules, resolve_specs
+        from repro.launch.dryrun import make_train_step, _build_param_specs
+        from repro.optim import adamw
+
+        cfg = ARCHITECTURES["stablelm-3b"].reduced()
+        api = get_model(cfg)
+        params, specs = api.init(jax.random.PRNGKey(0))
+        opt = adamw(1e-3)
+        opt_state = opt.init(params)
+        tk = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
+        batch = {"tokens": tk, "labels": jnp.roll(tk, -1, 1)}
+        step = make_train_step(api, opt)
+
+        # single device reference
+        ref_params, ref_opt, ref_loss = jax.jit(step)(params, opt_state, batch)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rules = Rules(table=dict(TRAIN_RULES.table))
+        param_sh = resolve_specs(params, specs, mesh, rules)
+        opt_sh = {"m": param_sh, "v": param_sh,
+                  "step": NamedSharding(mesh, P())}
+        batch_sh = {k: NamedSharding(mesh, P("data")) for k in batch}
+        jitted = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh,
+                                        NamedSharding(mesh, P())))
+        with mesh:
+            sh_params, sh_opt, sh_loss = jitted(params, opt_state, batch)
+        np.testing.assert_allclose(float(sh_loss), float(ref_loss),
+                                   rtol=2e-4, atol=2e-4)
+        err = max(float(jnp.abs(a.astype(jnp.float32) -
+                                b.astype(jnp.float32)).max())
+                  for a, b in zip(jax.tree.leaves(ref_params),
+                                  jax.tree.leaves(sh_params)))
+        assert err < 3e-2, err   # bf16 params; collective reduction order
+        print("SHARDED_OK", float(sh_loss), err)
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_shard_map_fedavg_merge_matches_reference():
+    """shard_map psum merge across an 8-way data axis == the dense-tree
+    reference merge (subprocess: needs 8 CPU devices)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.federated.distributed import fedavg_allreduce_merge
+        from repro.federated.server import fedavg_merge
+
+        mesh = jax.make_mesh((8,), ("data",))
+        key = jax.random.PRNGKey(0)
+        g = {"w": jax.random.normal(key, (16, 8)),
+             "b": jnp.ones((8,), jnp.bfloat16)}
+        upd = jax.tree.map(
+            lambda x: jnp.stack([x * (i + 1) for i in range(8)]), g)
+        for mask_bits in ([1,0,1,0,1,1,0,1], [0]*8, [1]*8):
+            mask = jnp.asarray(mask_bits, bool)
+            want = fedavg_merge(g, upd, mask)
+            with mesh:
+                got = fedavg_allreduce_merge(g, upd, mask, mesh, ("data",))
+            for k in g:
+                np.testing.assert_allclose(
+                    np.asarray(got[k], np.float32),
+                    np.asarray(want[k], np.float32), atol=2e-2)
+        print("SHARDMAP_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDMAP_OK" in out.stdout
