@@ -1,0 +1,109 @@
+"""1000-scenario (γ, c, N) NE sweep: batched solver vs. scalar loop.
+
+Mechanism design solves the participation game as an inner loop — γ*
+calibration, Stackelberg rate grids, scenario tables. This benchmark times
+the two ways to do a 1000-scenario sweep:
+
+* ``scalar`` — loop the pre-existing scalar pipeline (Python-level
+  bisection + eager JAX: ``solve_symmetric_ne`` + ``centralized_optimum``
+  + ``price_of_anarchy``, i.e. the old ``solve_game`` body) over every
+  scenario. By default a ``--sample`` subset is timed and the total is
+  extrapolated (the full scalar sweep takes tens of minutes); pass
+  ``--full-scalar`` to loop all scenarios for an exact number.
+* ``batched`` — ``repro.mechanisms.solve_scenarios``: scenarios grouped by
+  N (shapes are static per N), one jitted XLA program per group.
+
+Emits ``name,us_per_call,derived`` CSV rows like the other benchmarks and a
+final ``speedup`` row; the acceptance bar is ≥ 10×.
+
+Run:  PYTHONPATH=src:. python benchmarks/mechanisms_sweep.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.duration import theoretical_duration
+from repro.core.game import (centralized_optimum, price_of_anarchy,
+                             solve_symmetric_ne)
+from repro.core.utility import UtilityParams
+from repro.mechanisms import solve_scenarios
+from benchmarks.common import header, record
+
+GAMMAS = np.linspace(0.0, 1.2, 10)
+COSTS = np.linspace(0.25, 12.0, 20)
+N_NODES = (30, 40, 50, 60, 70)
+
+
+def build_scenarios() -> tuple[list[UtilityParams], dict]:
+    scenarios = [
+        UtilityParams(gamma=float(g), cost=float(c), n_nodes=n)
+        for n in N_NODES for g in GAMMAS for c in COSTS
+    ]
+    dur_for_n = {n: theoretical_duration(n) for n in N_NODES}
+    return scenarios, dur_for_n
+
+
+def solve_game_scalar(up: UtilityParams, dur) -> float:
+    """The pre-batching scalar pipeline (old ``solve_game`` body)."""
+    nes = solve_symmetric_ne(up, dur, grid_size=400)
+    opt_p, opt_cost = centralized_optimum(up, dur)
+    poa, _ = price_of_anarchy(nes, opt_cost, up, dur)
+    return poa
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sample", type=int, default=20,
+                    help="scalar scenarios to time (extrapolated to all)")
+    ap.add_argument("--full-scalar", action="store_true",
+                    help="loop the scalar solver over every scenario")
+    args = ap.parse_args()
+
+    scenarios, dur_for_n = build_scenarios()
+    total = len(scenarios)
+    header()
+
+    # -- batched: warm-up compiles (one program per distinct N), then time --
+    sols = solve_scenarios(scenarios, dur_for_n)
+    jax.block_until_ready([s.poa for s in sols])
+    t0 = time.perf_counter()
+    sols = solve_scenarios(scenarios, dur_for_n)
+    poas = np.concatenate([np.asarray(s.poa) for s in sols])
+    jax.block_until_ready(poas)
+    t_batched = time.perf_counter() - t0
+    record("mechanisms_sweep.batched_total", t_batched * 1e6,
+           f"{total} scenarios; worst PoA {np.nanmax(poas[np.isfinite(poas)]):.2f}")
+
+    # -- scalar loop -------------------------------------------------------
+    rng = np.random.default_rng(0)
+    if args.full_scalar:
+        sample = scenarios
+    else:
+        idx = rng.choice(total, size=min(args.sample, total), replace=False)
+        sample = [scenarios[i] for i in idx]
+    t0 = time.perf_counter()
+    for up in sample:
+        solve_game_scalar(up, dur_for_n[up.n_nodes])
+    t_scalar_sample = time.perf_counter() - t0
+    t_scalar = t_scalar_sample * (total / len(sample))
+    tag = "measured" if args.full_scalar else f"extrapolated from {len(sample)}"
+    record("mechanisms_sweep.scalar_total", t_scalar * 1e6,
+           f"{total} scenarios ({tag})")
+
+    speedup = t_scalar / t_batched
+    record("mechanisms_sweep.speedup", speedup,
+           f"target >= 10x; batched {t_batched:.2f}s vs scalar {t_scalar:.1f}s")
+    print(f"\nbatched sweep: {t_batched:.2f}s for {total} scenarios "
+          f"({t_batched / total * 1e3:.2f} ms/scenario)")
+    print(f"scalar loop:   {t_scalar:.1f}s ({tag}; "
+          f"{t_scalar / total * 1e3:.0f} ms/scenario)")
+    print(f"speedup: {speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ Bridges the game-theory layer to the FL runtime:
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional
+from typing import TYPE_CHECKING, Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,9 @@ from repro.core.duration import DurationModel, paper_duration_model
 from repro.core.energy import EnergyLedger, EnergyParams
 from repro.core.game import GameSolution, solve_game
 from repro.core.utility import UtilityParams
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.mechanisms.base import Mechanism, MechanismReport
 
 __all__ = ["ParticipationController", "RooflineClock"]
 
@@ -70,16 +73,26 @@ class ParticipationController:
         "ne_worst"    — worst-cost NE (the PoA numerator; pessimistic).
         "centralized" — centralized optimum (the PoA denominator).
         "fixed"       — externally supplied probability.
+        "mechanism"   — worst NE of the game *induced by an incentive
+                        mechanism* (repro.mechanisms). When no mechanism is
+                        supplied, the AoI reward weight γ* is calibrated on
+                        the fly so even the worst induced NE is within
+                        ``target_poa`` of the centralized optimum.
     """
 
     n_nodes: int
     gamma: float = 0.0
     cost: float = 0.0
-    mode: Literal["ne", "ne_worst", "centralized", "fixed"] = "ne"
+    mode: Literal["ne", "ne_worst", "centralized", "fixed",
+                  "mechanism"] = "ne"
     fixed_p: float = 0.5
     duration_model: Optional[DurationModel] = None
     energy_params: EnergyParams = dataclasses.field(default_factory=EnergyParams)
+    mechanism: Optional["Mechanism"] = None
+    target_poa: float = 1.05
     _solution: Optional[GameSolution] = dataclasses.field(default=None, repr=False)
+    _mech_report: Optional["MechanismReport"] = dataclasses.field(
+        default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.duration_model is None:
@@ -101,9 +114,27 @@ class ParticipationController:
                                         self.duration_model)
         return self._solution
 
+    def solve_mechanism(self) -> "MechanismReport":
+        """Evaluate (calibrating if needed) the incentive mechanism."""
+        if self._mech_report is None:
+            # Lazy import — repro.mechanisms imports repro.core at load time.
+            from repro.mechanisms import calibrate_gamma, evaluate_mechanism
+
+            mech = self.mechanism
+            if mech is None:
+                mech = calibrate_gamma(self.utility_params,
+                                       self.duration_model,
+                                       target_poa=self.target_poa).mechanism
+            self._mech_report = evaluate_mechanism(
+                mech, self.utility_params, self.duration_model)
+        return self._mech_report
+
     def participation_probability(self) -> float:
         if self.mode == "fixed":
             return float(self.fixed_p)
+        if self.mode == "mechanism":
+            ne_p = self.solve_mechanism().ne_p
+            return float(ne_p) if ne_p == ne_p else 0.0  # NaN: no induced NE
         sol = self.solve()
         if self.mode == "centralized":
             return sol.opt_p
@@ -133,11 +164,12 @@ class ParticipationController:
             p_hw_w=clock.p_hw_w,
             t_train_s=min(clock.t_train_s, self.energy_params.t_round_s),
         )
-        return dataclasses.replace(self, energy_params=ep, _solution=None)
+        return dataclasses.replace(self, energy_params=ep, _solution=None,
+                                   _mech_report=None)
 
     def diagnostics(self) -> dict:
         sol = self.solve()
-        return {
+        out = {
             "mode": self.mode,
             "p": self.participation_probability(),
             "equilibria": sol.equilibria,
@@ -148,3 +180,17 @@ class ParticipationController:
             "e_participant_j": self.energy_params.e_participant_j,
             "e_idle_j": self.energy_params.e_idle_j,
         }
+        if self.mode == "mechanism":
+            rep = self.solve_mechanism()
+            out.update({
+                "mechanism": rep.mechanism,
+                "mechanism_poa": rep.poa,
+                "mechanism_ne": rep.ne_p,
+                # False when calibration could not reach target_poa (the
+                # best-effort mechanism is still applied — callers must not
+                # assume the efficiency target silently held).
+                "mechanism_target_met": rep.poa <= self.target_poa + 1e-9,
+                "planner_budget": rep.planner_budget,
+                "individually_rational": rep.individually_rational,
+            })
+        return out

@@ -13,7 +13,11 @@ with cost = E[D] + c·p (the AoI incentive is a transfer; see utility.py).
 Numerics: grid scan + vectorized utility evaluation (the whole utility is a
 closed-form JAX function of p), then local golden-section refinement of best
 responses, then damped fixed-point iteration cross-checked by direct
-enumeration of BR fixed points on the grid.
+enumeration of BR fixed points on the grid. ``solve_game`` delegates the
+end-to-end pipeline to the batched fixed-shape solver in
+:mod:`repro.mechanisms.batched` (B = 1 of one jitted XLA program); the
+scalar entry points below are kept as the slow-but-simple oracles the
+batched solver is tested against.
 """
 from __future__ import annotations
 
@@ -196,9 +200,25 @@ def solve_game(
     dur: DurationModel,
     ne_grid: int = 400,
 ) -> GameSolution:
-    """End-to-end: equilibria + optimum + PoA for one (gamma, c) setting."""
-    nes = solve_symmetric_ne(params, dur, grid_size=ne_grid)
-    opt_p, opt_cost = centralized_optimum(params, dur)
-    poa, ne_costs = price_of_anarchy(nes, opt_cost, params, dur)
-    return GameSolution(equilibria=nes, ne_costs=ne_costs, opt_p=opt_p,
-                        opt_cost=opt_cost, poa=poa, params=params)
+    """End-to-end: equilibria + optimum + PoA for one (gamma, c) setting.
+
+    Delegates to the batched solver in :mod:`repro.mechanisms.batched`
+    (B = 1 of its one-XLA-program pipeline): identical corner-NE semantics
+    (p = P_MIN iff φ(P_MIN) ≤ 0, p = P_MAX iff φ(P_MAX) ≥ 0), sign-change
+    root finding of φ, and the eq. (13) PoA against the grid-refined
+    centralized optimum. Repeated calls with the same grid sizes hit the
+    jit cache, so scalar callers get the batched speed too.
+    """
+    if dur.n_nodes != params.n_nodes:
+        raise ValueError(f"duration model is for N={dur.n_nodes}, "
+                         f"params have N={params.n_nodes}")
+    # Lazy import: repro.mechanisms depends on this module at import time.
+    from repro.mechanisms.batched import solve_batched
+
+    sol = solve_batched(jnp.asarray([params.gamma]),
+                        jnp.asarray([params.cost]), dur, ne_grid=ne_grid)
+    return GameSolution(equilibria=sol.equilibria_list(0),
+                        ne_costs=sol.ne_costs_list(0),
+                        opt_p=float(sol.opt_p[0]),
+                        opt_cost=float(sol.opt_cost[0]),
+                        poa=float(sol.poa[0]), params=params)

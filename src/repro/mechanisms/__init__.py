@@ -1,0 +1,40 @@
+"""Incentive-mechanism design on top of the participation game.
+
+The paper measures PoA ≥ 1.28 for distributed participatory FL and argues
+for incentive mechanisms "possibly based on Age of Information" (§V). This
+subsystem closes that gap constructively:
+
+* :mod:`repro.mechanisms.batched` — jit/vmap-style batched symmetric-NE +
+  centralized-optimum solver (pure ``lax`` control flow; B scenarios per
+  XLA program). ``repro.core.game.solve_game`` delegates here.
+* :mod:`repro.mechanisms.base` — the :class:`Mechanism` contract: transfer
+  rule → induced game → worst-NE PoA, planner budget, IR check.
+* :mod:`repro.mechanisms.aoi_reward` — calibrates the smallest AoI weight
+  γ* hitting a PoA target (bisection over the batched solver).
+* :mod:`repro.mechanisms.stackelberg` — leader/follower per-participation
+  pricing; reports planner expenditure vs. energy saved.
+"""
+import repro.core  # noqa: F401  (enables x64 before any game math)
+
+from repro.mechanisms.base import (  # noqa: E402,F401
+    Mechanism,
+    MechanismReport,
+    evaluate_mechanism,
+)
+from repro.mechanisms.batched import (  # noqa: E402,F401
+    BatchedGameSolution,
+    batched_phi,
+    binom_pmf,
+    solve_batched,
+    solve_scenarios,
+)
+from repro.mechanisms.aoi_reward import (  # noqa: E402,F401
+    AoIRewardMechanism,
+    CalibrationResult,
+    calibrate_gamma,
+)
+from repro.mechanisms.stackelberg import (  # noqa: E402,F401
+    ParticipationRewardMechanism,
+    StackelbergPlanner,
+    StackelbergSolution,
+)

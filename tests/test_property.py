@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die, without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core  # noqa: F401
 from repro.core.aoi import expected_aoi
