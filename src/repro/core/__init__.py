@@ -38,6 +38,17 @@ from repro.core.controller import ParticipationController  # noqa: E402,F401
 from repro.core.asymmetric import (  # noqa: E402,F401
     HeterogeneousGame,
     best_response_dynamics,
+    best_response_dynamics_reference,
     planner_coordinate_descent,
+    verify_equilibrium,
+)
+from repro.core.asymmetric_batched import (  # noqa: E402,F401
+    HeterogeneousPoA,
+    HeterogeneousSolution,
+    planner_batched,
+    poa_report,
+    social_cost_batched,
+    solve_heterogeneous,
+    verify_equilibrium_batched,
 )
 from repro.core.online import OnlineDurationEstimator  # noqa: E402,F401

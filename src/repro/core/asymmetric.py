@@ -12,11 +12,20 @@ and optionally individual AoI weights ``gamma_i``. We compute:
   discrimination) and the heterogeneity-aware social cost of the reached
   profile, giving a heterogeneous PoA.
 
+The heavy lifting lives in :mod:`repro.core.asymmetric_batched`: one jitted
+XLA program runs the damped Gauss-Seidel sweep as a `lax.scan` over nodes
+with O(N) leave-one-out pmf deconvolution, and ``vmap``s over scenario
+batches. :func:`best_response_dynamics`, :func:`verify_equilibrium`, and
+:func:`planner_coordinate_descent` below keep their original signatures and
+semantics but delegate there (B = 1); the pre-batching Python-loop
+implementations are retained as ``*_reference`` oracles for tests.
+
 Everything reuses :mod:`repro.core.poibin`; the per-node best response
 exploits the same decomposition as the symmetric case: with opponents'
 profile fixed, u_i is linear in p_i (duration, cost) plus the concave AoI
 term, so the BR is either a corner or the unique stationary point of the
-concave part.
+concave part (closed form in
+:func:`repro.core.asymmetric_batched.best_response_given_slope`).
 """
 from __future__ import annotations
 
@@ -24,15 +33,23 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.aoi import log_aoi
+from repro.core.asymmetric_batched import (P_MIN, best_response_given_slope,
+                                           planner_batched,
+                                           solve_heterogeneous,
+                                           verify_equilibrium_batched)
 from repro.core.duration import DurationModel
 from repro.core.poibin import poibin_pmf
 
-__all__ = ["HeterogeneousGame", "best_response_dynamics"]
-
-P_MIN = 1e-3
+__all__ = [
+    "HeterogeneousGame",
+    "best_response_dynamics",
+    "best_response_dynamics_reference",
+    "planner_coordinate_descent",
+    "verify_equilibrium",
+    "verify_equilibrium_reference",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,24 +80,12 @@ class HeterogeneousGame:
     def best_response(self, p: jax.Array, i: int) -> jax.Array:
         """Exact BR of node i: corner or stationary point of the concave part.
 
-        u_i(p_i) = const + p_i * slope_d(-) - gamma_i*log(1/p_i - 1/2)
-                   - c_i p_i
-        d/dp_i = slope - c_i + gamma_i * 2 / (p_i (2 - p_i)).
-        For gamma_i = 0: bang-bang on sign(slope - c_i). Else solve the
-        quadratic gamma*2/(p(2-p)) = c_i - slope for p in (0, 1].
+        Closed form shared with the batched engine — see
+        :func:`repro.core.asymmetric_batched.best_response_given_slope` for
+        the derivation (and the two-sided division guard at a = 0).
         """
         slope = -self.duration_slope(p, i)            # utility slope part
-        a = slope - self.costs[i]
-        g = self.gammas[i]
-        if_zero = jnp.where(a > 0, 1.0, P_MIN)
-        # g*2/(p(2-p)) + a = 0  =>  p(2-p) = -2g/a (needs a < 0)
-        prod = -2.0 * g / jnp.where(a < 0, a, -1e-9)
-        # p^2 - 2p + prod = 0 -> p = 1 - sqrt(1 - prod)
-        disc = jnp.clip(1.0 - prod, 0.0, 1.0)
-        p_star = 1.0 - jnp.sqrt(disc)
-        interior = jnp.clip(p_star, P_MIN, 1.0)
-        return jnp.where(g <= 0.0, if_zero,
-                         jnp.where(a >= 0, 1.0, interior))
+        return best_response_given_slope(slope, self.costs[i], self.gammas[i])
 
     def social_cost(self, p: jax.Array) -> jax.Array:
         """Sum over nodes of (E[D] + c_i p_i) (transfers excluded)."""
@@ -102,7 +107,24 @@ def best_response_dynamics(
     coupled congestion-style games exhibit. Returns (profile, converged,
     iters); the fixed point is an asymmetric NE (each node's BR given the
     others).
+
+    Delegates to the batched engine (B = 1 of one jitted XLA program) with
+    identical semantics; see :func:`best_response_dynamics_reference` for the
+    pre-batching Python loop it is tested against.
     """
+    sol = solve_heterogeneous(game.costs, game.gammas, game.dur, p0=p0,
+                              damping=damping, max_iters=max_iters, tol=tol)
+    return sol.single()
+
+
+def best_response_dynamics_reference(
+    game: HeterogeneousGame,
+    p0: jax.Array | None = None,
+    damping: float = 0.5,
+    max_iters: int = 200,
+    tol: float = 1e-5,
+) -> tuple[jax.Array, bool, int]:
+    """The original eager Gauss-Seidel loop (oracle for the batched engine)."""
     p = jnp.full((game.n,), 0.5) if p0 is None else jnp.asarray(p0)
     for it in range(max_iters):
         delta = 0.0
@@ -125,26 +147,33 @@ def planner_coordinate_descent(
     """Heterogeneity-aware planner: round-robin per-node minimization of the
     social cost. Monotone non-increasing, so started from any profile it
     lower-bounds that profile's cost — the PoA denominator for heterogeneous
-    games (a common-p planner is provably suboptimal under cost spread)."""
-    p = jnp.asarray(p0)
-    gridv = jnp.linspace(P_MIN, 1.0, grid)
-    for _ in range(rounds):
-        changed = False
-        for i in range(game.n):
-            costs = jnp.stack([game.social_cost(p.at[i].set(q))
-                               for q in gridv])
-            best = gridv[int(jnp.argmin(costs))]
-            if abs(float(best) - float(p[i])) > 1e-9:
-                p = p.at[i].set(best)
-                changed = True
-        if not changed:
-            break
-    return p
+    games (a common-p planner is provably suboptimal under cost spread).
+
+    Delegates to the jitted :func:`repro.core.asymmetric_batched.planner_batched`.
+    The social cost is linear in each ``p_i`` with the others fixed, so each
+    coordinate minimum is a corner and the historical ``grid`` parameter is
+    moot (kept for API compatibility — a grid argmin of a linear function
+    picks the same corner).
+    """
+    del grid  # exact corner selection supersedes the grid argmin
+    return planner_batched(game.costs, game.dur, jnp.asarray(p0),
+                           rounds=rounds)[0]
 
 
 def verify_equilibrium(game: HeterogeneousGame, p: jax.Array,
                        grid: int = 64) -> float:
-    """Max profitable unilateral deviation over a grid (0 at an exact NE)."""
+    """Max profitable unilateral deviation over a grid (0 at an exact NE).
+
+    Delegates to the jitted vectorized deviation grid in
+    :func:`repro.core.asymmetric_batched.verify_equilibrium_batched`.
+    """
+    return float(verify_equilibrium_batched(game.costs, game.gammas, game.dur,
+                                            jnp.asarray(p), grid=grid)[0])
+
+
+def verify_equilibrium_reference(game: HeterogeneousGame, p: jax.Array,
+                                 grid: int = 64) -> float:
+    """The original Python double loop (oracle for the jitted certifier)."""
     worst = 0.0
     gridv = jnp.linspace(P_MIN, 1.0, grid)
     for i in range(game.n):

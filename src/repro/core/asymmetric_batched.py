@@ -1,0 +1,388 @@
+"""Batched heterogeneous-equilibrium engine: one XLA program per sweep.
+
+The scalar solver in :mod:`repro.core.asymmetric` runs Python-loop
+Gauss-Seidel with a full ``jnp.delete`` + O(N·N) DFT pmf recompute per node
+per iteration — seconds for a single N=50 equilibrium, and a (costs, gammas)
+scenario sweep is out of reach. This module rebuilds that layer as pure
+fixed-shape ``lax`` control flow, jitted once and ``vmap``-ed over a batch of
+scenarios:
+
+* **Damped Gauss-Seidel as a scan.** One round-robin sweep is a `lax.scan`
+  over nodes carrying ``(pmf, p)``: node i's opponents' pmf comes from the
+  O(N) leave-one-out *deconvolution* (:func:`repro.core.poibin.poibin_pmf_loo`
+  divides node i's ``[1-p_i, p_i]`` factor back out of the full pmf), its
+  exact closed-form best response is evaluated, and the updated factor is
+  convolved back in O(N). A full sweep is O(N²) — the same cost as *one*
+  pmf recompute in the scalar path — and the pmf is rebuilt from scratch
+  via the stable O(N²) convolution recursion once per sweep so
+  deconvolve/convolve round-trip error never accumulates across sweeps.
+  Sweeps iterate inside a `lax.while_loop` until the sweep-wide update
+  delta drops below ``tol`` (identical semantics to the scalar loop).
+* **Jitted certification.** :func:`verify_equilibrium_batched` evaluates
+  every node's utility on a deviation grid in one shot — all N leave-one-out
+  pmfs (a vmapped deconvolution), then a broadcast (N, G) utility table —
+  no Python double loop.
+* **Jitted planner.** The social cost ``N·E[D] + Σ c_i p_i`` is *linear* in
+  each ``p_i`` with the others fixed (E[D] is multilinear), so the
+  per-coordinate minimum sits at a corner determined by the sign of
+  ``N·∂E[D]/∂p_i + c_i``; :func:`planner_batched` runs that coordinate
+  descent with the same deconvolution trick and matches the scalar
+  grid-argmin planner's fixed points.
+* **Heterogeneous PoA.** :func:`poa_report` packages NE + certification +
+  planner + social costs for a whole scenario batch.
+
+Everything is written single-scenario and lifted with ``vmap`` in the jitted
+wrappers, so a ≥500-scenario (costs, gammas, dur) sweep at N=50 is one XLA
+dispatch (see ``benchmarks/heterogeneous_sweep.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aoi import log_aoi
+from repro.core.duration import DurationModel
+from repro.core.poibin import (poibin_convolve, poibin_pmf_loo,
+                               poibin_pmf_recursive)
+
+__all__ = [
+    "P_MIN",
+    "HeterogeneousSolution",
+    "HeterogeneousPoA",
+    "best_response_given_slope",
+    "solve_heterogeneous",
+    "verify_equilibrium_batched",
+    "planner_batched",
+    "social_cost_batched",
+    "poa_report",
+]
+
+P_MIN = 1e-3  # matches repro.core.game / repro.core.asymmetric
+
+
+def best_response_given_slope(slope: jax.Array, cost: jax.Array,
+                              gamma: jax.Array) -> jax.Array:
+    """Exact best response from the (utility-side) duration slope.
+
+    With opponents fixed, ``u_i(p_i) = const + a·p_i - γ·log(1/p_i - 1/2)``
+    where ``a = slope - cost`` and ``slope = -(E[d(m_-i+1)] - E[d(m_-i)])``.
+    ``du/dp_i = a + 2γ/(p_i(2-p_i))``:
+
+    * γ = 0: bang-bang on sign(a); exact indifference (a = 0) resolves to
+      ``P_MIN``, matching the scalar solver.
+    * γ > 0, a ≥ 0: utility strictly increasing ⇒ p = 1.
+    * γ > 0, a < 0: the unique stationary point solves
+      ``p(2-p) = -2γ/a``, i.e. ``p* = 1 - sqrt(1 + 2γ/a)`` (clipped to
+      [P_MIN, 1]; the clip also absorbs the a → 0⁻ limit p* → 1).
+
+    The a ≥ 0 quadratic branch is masked out by the outer ``where``, so its
+    divisor is replaced by a benign -1 — a two-sided guard; dividing by a
+    ``-1e-9`` sentinel (the old guard) produced a huge ``prod`` intermediate
+    at a = 0 exactly.
+    """
+    a = slope - cost
+    if_zero = jnp.where(a > 0.0, 1.0, P_MIN)
+    denom = jnp.where(a < 0.0, a, -1.0)
+    prod = -2.0 * gamma / denom          # p(2-p) at the stationary point
+    disc = jnp.clip(1.0 - prod, 0.0, 1.0)
+    interior = jnp.clip(1.0 - jnp.sqrt(disc), P_MIN, 1.0)
+    return jnp.where(gamma <= 0.0, if_zero,
+                     jnp.where(a >= 0.0, 1.0, interior))
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Seidel fixed point (single scenario; vmapped by the public wrapper)
+# ---------------------------------------------------------------------------
+
+def _gs_fixed_point(costs, gammas, d_tab, p0, *, damping, max_iters, tol):
+    n = costs.shape[0]
+    dd = d_tab[1:] - d_tab[:-1]
+
+    def sweep(p):
+        f = poibin_pmf_recursive(p)  # fresh O(N²) pmf once per sweep
+
+        def node(carry, i):
+            f, p = carry
+            pi = p[i]
+            loo = poibin_pmf_loo(f, pi)              # (N+1,), last entry 0
+            slope = -(loo[:-1] @ dd)                  # utility-side slope
+            br = best_response_given_slope(slope, costs[i], gammas[i])
+            new_pi = (1.0 - damping) * pi + damping * br
+            f_new = poibin_convolve(loo, new_pi)
+            return (f_new, p.at[i].set(new_pi)), jnp.abs(new_pi - pi)
+
+        (_, p_new), deltas = jax.lax.scan(node, (f, p), jnp.arange(n))
+        return p_new, jnp.max(deltas)
+
+    def cond(state):
+        _, delta, it = state
+        return (delta >= tol) & (it < max_iters)
+
+    def body(state):
+        p, _, it = state
+        p_new, delta = sweep(p)
+        return p_new, delta, it + 1
+
+    p, delta, iters = jax.lax.while_loop(
+        cond, body, (p0, jnp.asarray(jnp.inf, p0.dtype), jnp.asarray(0)))
+    return p, delta < tol, iters
+
+
+@functools.partial(jax.jit, static_argnames=("damping", "max_iters", "tol"))
+def _solve_vmapped(costs, gammas, d_tab, p0, *, damping, max_iters, tol):
+    solve = functools.partial(_gs_fixed_point, damping=damping,
+                              max_iters=max_iters, tol=tol)
+    return jax.vmap(solve)(costs, gammas, d_tab, p0)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousSolution:
+    """A vmapped batch of asymmetric-NE solves."""
+
+    costs: jax.Array       # (B, N)
+    gammas: jax.Array      # (B, N)
+    p: jax.Array           # (B, N) fixed-point profiles
+    converged: jax.Array   # (B,) bool
+    iters: jax.Array       # (B,) Gauss-Seidel sweeps run
+
+    @property
+    def batch(self) -> int:
+        return int(self.p.shape[0])
+
+    def single(self) -> tuple[jax.Array, bool, int]:
+        """The (profile, converged, iters) triple of a B = 1 solve."""
+        if self.batch != 1:
+            raise ValueError(
+                f"single() called on a batch of {self.batch} scenarios")
+        return self.p[0], bool(self.converged[0]), int(self.iters[0])
+
+
+def _prepare_batch(costs, gammas, dur, p0):
+    d_tab = dur.table() if isinstance(dur, DurationModel) else jnp.asarray(dur)
+    costs = jnp.atleast_2d(jnp.asarray(costs, d_tab.dtype))
+    gammas = jnp.atleast_2d(jnp.asarray(gammas, d_tab.dtype))
+    try:
+        shape = jnp.broadcast_shapes(costs.shape, gammas.shape)
+    except ValueError as e:
+        raise ValueError(f"costs {costs.shape} vs gammas {gammas.shape}: {e}")
+    costs = jnp.broadcast_to(costs, shape)
+    gammas = jnp.broadcast_to(gammas, shape)
+    b, n = shape
+    if d_tab.ndim == 1:
+        d_tab = jnp.broadcast_to(d_tab, (b,) + d_tab.shape)
+    if d_tab.shape != (b, n + 1):
+        raise ValueError(f"duration table {d_tab.shape}, want {(b, n + 1)}")
+    if p0 is None:
+        p0 = jnp.full((b, n), 0.5, d_tab.dtype)
+    else:
+        p0 = jnp.broadcast_to(jnp.atleast_2d(jnp.asarray(p0, d_tab.dtype)),
+                              (b, n))
+    return costs, gammas, d_tab, p0
+
+
+def solve_heterogeneous(
+    costs: jax.Array,
+    gammas: jax.Array,
+    dur: DurationModel | jax.Array,
+    *,
+    p0: jax.Array | None = None,
+    damping: float = 0.5,
+    max_iters: int = 200,
+    tol: float = 1e-5,
+) -> HeterogeneousSolution:
+    """Solve a batch of heterogeneous games in one jitted program.
+
+    Args:
+        costs / gammas: ``(N,)`` for a single game or ``(B, N)`` for a batch;
+            the two broadcast against each other in either direction, so e.g.
+            ``costs (N,)`` with ``gammas (B, N)`` runs a γ-sweep over one
+            cost vector.
+        dur: a shared :class:`DurationModel`, a shared ``(N+1,)`` duration
+            table, or a per-scenario ``(B, N+1)`` stack of tables.
+        p0: initial profile(s); defaults to the all-0.5 profile like the
+            scalar solver.
+        damping / max_iters / tol: Gauss-Seidel controls with the scalar
+            solver's defaults and semantics (``iters`` counts round-robin
+            sweeps; convergence is max per-node update < tol within a sweep).
+    """
+    costs, gammas, d_tab, p0 = _prepare_batch(costs, gammas, dur, p0)
+    p, conv, iters = _solve_vmapped(costs, gammas, d_tab, p0,
+                                    damping=float(damping),
+                                    max_iters=int(max_iters), tol=float(tol))
+    return HeterogeneousSolution(costs=costs, gammas=gammas, p=p,
+                                 converged=conv, iters=iters)
+
+
+# ---------------------------------------------------------------------------
+# Jitted certification: vectorized unilateral-deviation grid
+# ---------------------------------------------------------------------------
+
+def _loo_tables(p, d_tab):
+    """Per-node E[d(m_-i)] and its p_i-slope from one pmf + N deconvolutions.
+
+    Returns ``(base, slope)``, both (N,): with opponents fixed,
+    ``E[D](q) = base_i + q·slope_i`` for node i playing q.
+    """
+    dd = d_tab[1:] - d_tab[:-1]
+    f = poibin_pmf_recursive(p)
+    loo = jax.vmap(poibin_pmf_loo, in_axes=(None, 0))(f, p)   # (N, N+1)
+    base = loo[:, :-1] @ d_tab[:-1]
+    slope = loo[:, :-1] @ dd
+    return base, slope
+
+
+def _verify_one(costs, gammas, d_tab, p, *, grid):
+    base, slope = _loo_tables(p, d_tab)
+    gridv = jnp.linspace(P_MIN, 1.0, grid).astype(p.dtype)
+    aoi_dev = log_aoi(gridv)
+    u_dev = (-(base[:, None] + gridv[None, :] * slope[:, None])
+             - gammas[:, None] * aoi_dev[None, :]
+             - costs[:, None] * gridv[None, :])                # (N, G)
+    u_eq = (-(base + p * slope) - gammas * log_aoi(p) - costs * p)  # (N,)
+    return jnp.maximum(jnp.max(u_dev - u_eq[:, None]), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("grid",))
+def _verify_vmapped(costs, gammas, d_tab, p, *, grid):
+    return jax.vmap(functools.partial(_verify_one, grid=grid))(
+        costs, gammas, d_tab, p)
+
+
+def verify_equilibrium_batched(
+    costs: jax.Array,
+    gammas: jax.Array,
+    dur: DurationModel | jax.Array,
+    p: jax.Array,
+    *,
+    grid: int = 64,
+) -> jax.Array:
+    """Max profitable unilateral deviation per scenario (0 at an exact NE).
+
+    One jitted program: all N leave-one-out pmfs via vmapped deconvolution,
+    then an (N, grid) deviation-utility table per scenario — no Python loops.
+    Accepts the same single-game / batched shapes as
+    :func:`solve_heterogeneous`; returns ``(B,)``.
+    """
+    costs, gammas, d_tab, p = _prepare_batch(costs, gammas, dur, p)
+    return _verify_vmapped(costs, gammas, d_tab, p, grid=int(grid))
+
+
+# ---------------------------------------------------------------------------
+# Jitted heterogeneity-aware planner + social cost + PoA report
+# ---------------------------------------------------------------------------
+
+def _social_cost_one(costs, d_tab, p):
+    n = costs.shape[0]
+    f = poibin_pmf_recursive(p)
+    return n * (f @ d_tab) + costs @ p
+
+
+@jax.jit
+def _social_cost_vmapped(costs, d_tab, p):
+    return jax.vmap(_social_cost_one)(costs, d_tab, p)
+
+
+def social_cost_batched(costs: jax.Array, dur: DurationModel | jax.Array,
+                        p: jax.Array) -> jax.Array:
+    """``Σ_i (E[D] + c_i p_i) = N·E[D] + Σ c_i p_i`` per scenario, ``(B,)``."""
+    costs, _, d_tab, p = _prepare_batch(costs, jnp.zeros_like(costs), dur, p)
+    return _social_cost_vmapped(costs, d_tab, p)
+
+
+def _planner_one(costs, d_tab, p0, *, rounds):
+    n = costs.shape[0]
+    dd = d_tab[1:] - d_tab[:-1]
+
+    def sweep(p):
+        f = poibin_pmf_recursive(p)
+
+        def node(carry, i):
+            f, p = carry
+            loo = poibin_pmf_loo(f, p[i])
+            slope = loo[:-1] @ dd                 # ∂E[D]/∂p_i, others fixed
+            # Social cost is linear in p_i: N·slope + c_i decides the corner.
+            best = jnp.where(n * slope + costs[i] >= 0.0, P_MIN, 1.0)
+            f_new = poibin_convolve(loo, best)
+            return (f_new, p.at[i].set(best)), jnp.abs(best - p[i])
+
+        (_, p_new), deltas = jax.lax.scan(node, (f, p), jnp.arange(n))
+        return p_new, jnp.max(deltas)
+
+    def cond(state):
+        _, delta, it = state
+        return (delta > 0.0) & (it < rounds)
+
+    def body(state):
+        p, _, it = state
+        p_new, delta = sweep(p)
+        return p_new, delta, it + 1
+
+    p, _, _ = jax.lax.while_loop(
+        cond, body, (p0, jnp.asarray(jnp.inf, p0.dtype), jnp.asarray(0)))
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def _planner_vmapped(costs, d_tab, p0, *, rounds):
+    return jax.vmap(functools.partial(_planner_one, rounds=rounds))(
+        costs, d_tab, p0)
+
+
+def planner_batched(
+    costs: jax.Array,
+    dur: DurationModel | jax.Array,
+    p0: jax.Array,
+    *,
+    rounds: int = 20,
+) -> jax.Array:
+    """Heterogeneity-aware planner: jitted round-robin coordinate descent.
+
+    Each coordinate update is *exact* (the social cost is linear in one
+    ``p_i``, so the minimum is a corner picked by the sign of
+    ``N·∂E[D]/∂p_i + c_i``), which reproduces the scalar planner's
+    grid-argmin fixed points without any grid. Monotone non-increasing, so
+    started from an NE profile its cost lower-bounds the NE cost — the PoA
+    denominator. Returns ``(B, N)`` profiles.
+    """
+    costs, _, d_tab, p0 = _prepare_batch(costs, jnp.zeros_like(costs), dur, p0)
+    return _planner_vmapped(costs, d_tab, p0, rounds=int(rounds))
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousPoA:
+    """NE + certification + planner benchmark for a scenario batch."""
+
+    solution: HeterogeneousSolution
+    deviation: jax.Array   # (B,) max profitable unilateral deviation at NE
+    ne_cost: jax.Array     # (B,) social cost of the reached profile
+    opt_p: jax.Array       # (B, N) planner profile (descent from the NE)
+    opt_cost: jax.Array    # (B,)
+    poa: jax.Array         # (B,) heterogeneous PoA ≥ 1
+
+    @property
+    def batch(self) -> int:
+        return self.solution.batch
+
+
+def poa_report(
+    costs: jax.Array,
+    gammas: jax.Array,
+    dur: DurationModel | jax.Array,
+    *,
+    verify_grid: int = 64,
+    planner_rounds: int = 20,
+    **solver_kwargs,
+) -> HeterogeneousPoA:
+    """Solve, certify, and benchmark a batch of heterogeneous scenarios."""
+    sol = solve_heterogeneous(costs, gammas, dur, **solver_kwargs)
+    dev = verify_equilibrium_batched(sol.costs, sol.gammas, dur, sol.p,
+                                     grid=verify_grid)
+    ne_cost = social_cost_batched(sol.costs, dur, sol.p)
+    opt_p = planner_batched(sol.costs, dur, sol.p, rounds=planner_rounds)
+    opt_cost = social_cost_batched(sol.costs, dur, opt_p)
+    poa = ne_cost / jnp.maximum(opt_cost, 1e-12)
+    return HeterogeneousPoA(solution=sol, deviation=dev, ne_cost=ne_cost,
+                            opt_p=opt_p, opt_cost=opt_cost, poa=poa)

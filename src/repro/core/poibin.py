@@ -16,6 +16,8 @@ import jax.numpy as jnp
 __all__ = [
     "poibin_pmf",
     "poibin_pmf_recursive",
+    "poibin_convolve",
+    "poibin_pmf_loo",
     "poibin_mean",
     "poibin_cdf",
     "expected_duration",
@@ -71,6 +73,64 @@ def poibin_pmf_recursive(p: jax.Array) -> jax.Array:
     init = jnp.zeros((size,), p.dtype).at[0].set(1.0)
     pmf, _ = jax.lax.scan(step, init, p)
     return pmf
+
+
+def poibin_convolve(pmf: jax.Array, p_k: jax.Array) -> jax.Array:
+    """Fold one Bernoulli(``p_k``) factor into a Poisson-Binomial pmf.
+
+    ``pmf`` is a fixed-length ``(S,)`` array whose top entry must be zero
+    (the support grows by one); the result stays ``(S,)``. This is the single
+    step of :func:`poibin_pmf_recursive` exposed so the heterogeneous-game
+    engine can do incremental Gauss-Seidel pmf updates in O(N) instead of a
+    full O(N²) recompute per node.
+    """
+    shifted = jnp.concatenate([jnp.zeros((1,), pmf.dtype), pmf[:-1]])
+    return pmf * (1.0 - p_k) + shifted * p_k
+
+
+def poibin_pmf_loo(pmf: jax.Array, p_i: jax.Array) -> jax.Array:
+    """Leave-one-out deconvolution: divide node i's Bernoulli factor back out.
+
+    Given the ``(N+1,)`` pmf of all N nodes and node i's probability ``p_i``,
+    returns the ``(N+1,)`` pmf of the other N-1 nodes (support 0..N-1; the
+    last entry is zero). This inverts :func:`poibin_convolve` exactly:
+    ``poibin_convolve(poibin_pmf_loo(f, p_i), p_i) == f`` up to float error.
+
+    Numerics: the division recursion amplifies error by ``p/(1-p)`` per step
+    run forward and by ``(1-p)/p`` run backward, so we run
+
+    * forward  ``g[k] = (f[k] - p_i·g[k-1]) / (1-p_i)`` when ``p_i ≤ 1/2``,
+    * backward ``g[k] = (f[k+1] - (1-p_i)·g[k+1]) / p_i`` when ``p_i > 1/2``,
+
+    keeping the per-step amplification ≤ 1 for every ``p_i`` in [0, 1]
+    including the ``p_i ∈ {0, 1}`` corners (where the recursion degenerates
+    to a copy/shift). Both branches are fixed-shape `lax.scan`s, so this is
+    jit/vmap-safe.
+    """
+    pmf = jnp.asarray(pmf)
+    p_i = jnp.asarray(p_i, pmf.dtype)
+    q_i = 1.0 - p_i
+    use_fwd = p_i <= 0.5
+    # Safe denominators: the unused branch still executes under jit, so give
+    # it a benign divisor instead of a possible 0.
+    q_safe = jnp.where(use_fwd, q_i, 0.5)
+    p_safe = jnp.where(use_fwd, 0.5, p_i)
+
+    def fwd(g_prev, f_k):
+        g_k = (f_k - p_i * g_prev) / q_safe
+        return g_k, g_k
+
+    _, g_fwd = jax.lax.scan(fwd, jnp.zeros((), pmf.dtype), pmf[:-1])
+
+    def bwd(g_next, f_k1):
+        g_k = (f_k1 - q_i * g_next) / p_safe
+        return g_k, g_k
+
+    _, g_bwd = jax.lax.scan(bwd, jnp.zeros((), pmf.dtype), pmf[1:],
+                            reverse=True)
+
+    g = jnp.where(use_fwd, g_fwd, g_bwd)
+    return jnp.concatenate([g, jnp.zeros((1,), pmf.dtype)])
 
 
 def poibin_mean(p: jax.Array) -> jax.Array:

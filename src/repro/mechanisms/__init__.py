@@ -13,6 +13,9 @@ subsystem closes that gap constructively:
   γ* hitting a PoA target (bisection over the batched solver).
 * :mod:`repro.mechanisms.stackelberg` — leader/follower per-participation
   pricing; reports planner expenditure vs. energy saved.
+* :mod:`repro.mechanisms.heterogeneous` — smallest *uniform* γ* hitting a
+  PoA target for a **heterogeneous** cost vector, on the batched
+  asymmetric-NE engine (:mod:`repro.core.asymmetric_batched`).
 """
 import repro.core  # noqa: F401  (enables x64 before any game math)
 
@@ -37,4 +40,8 @@ from repro.mechanisms.stackelberg import (  # noqa: E402,F401
     ParticipationRewardMechanism,
     StackelbergPlanner,
     StackelbergSolution,
+)
+from repro.mechanisms.heterogeneous import (  # noqa: E402,F401
+    HeterogeneousCalibration,
+    calibrate_gamma_heterogeneous,
 )

@@ -1,0 +1,33 @@
+"""Shared pytest configuration.
+
+Registers deterministic hypothesis profiles so the property suite behaves
+the same on every CI run:
+
+* ``ci`` — derandomized (fixed example database-free seed), CI-sized
+  ``max_examples``, no deadline (JAX compile times would trip it). Loaded
+  automatically when ``$CI`` is set; CI also pins it explicitly via
+  ``HYPOTHESIS_PROFILE=ci``.
+* ``dev`` — the local default: random seeds, same deadline settings.
+
+Note: per-test ``@settings(...)`` decorators override only the keys they
+set; ``derandomize`` comes from the active profile either way.
+"""
+from __future__ import annotations
+
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:  # hypothesis is an optional test dep (importorskip)
+    pass
+else:
+    settings.register_profile("ci", max_examples=25, derandomize=True,
+                              deadline=None, print_blob=True)
+    settings.register_profile("dev", deadline=None)
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile:
+        settings.load_profile(_profile)
+    elif os.environ.get("CI"):
+        settings.load_profile("ci")
+    else:
+        settings.load_profile("dev")

@@ -1,0 +1,74 @@
+"""Shared test helpers: Nash-equilibrium certification.
+
+Several test files used to carry their own ad-hoc copy of the same check —
+"no unilateral deviation on a grid is profitable". This module is the one
+implementation, for both game flavors:
+
+* :func:`max_symmetric_deviation` — symmetric game (everyone at p*): the
+  best profitable deviation of one node over an action grid, via the O(N)
+  Binomial decomposition in ``symmetric_player_utility``.
+* :func:`max_heterogeneous_deviation` — heterogeneous profile: delegates to
+  the jitted vectorized certifier in :mod:`repro.core.asymmetric_batched`.
+
+Both return the *gain* of the best deviation (≤ tol certifies an NE); the
+``assert_*`` wrappers fail with the offending numbers in the message.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asymmetric_batched import verify_equilibrium_batched
+from repro.core.duration import DurationModel
+from repro.core.game import P_MIN
+from repro.core.utility import UtilityParams, symmetric_player_utility
+
+NE_TOL = 1e-4
+
+
+def max_symmetric_deviation(
+    p_star: float,
+    params: UtilityParams,
+    dur: DurationModel,
+    grid: int = 256,
+) -> float:
+    """Max profitable unilateral deviation from the symmetric profile p*."""
+    p_star = jnp.asarray(p_star)
+    gridv = jnp.linspace(P_MIN, 1.0, grid)
+    u_eq = symmetric_player_utility(p_star, p_star, params, dur)
+    u_dev = jax.vmap(
+        lambda q: symmetric_player_utility(q, p_star, params, dur))(gridv)
+    return float(jnp.max(u_dev) - u_eq)
+
+
+def max_heterogeneous_deviation(
+    costs: jax.Array,
+    gammas: jax.Array,
+    dur: DurationModel,
+    p: jax.Array,
+    grid: int = 64,
+) -> float:
+    """Max profitable unilateral deviation from a heterogeneous profile.
+
+    Single-game helper: the unpack below raises if a batch sneaks in
+    (certifying only scenario 0 of a batch would be silently wrong).
+    """
+    (dev,) = verify_equilibrium_batched(costs, gammas, dur, jnp.asarray(p),
+                                        grid=grid)
+    return float(dev)
+
+
+def assert_symmetric_ne(p_star, params, dur, tol: float = NE_TOL,
+                        grid: int = 256) -> None:
+    gain = max_symmetric_deviation(p_star, params, dur, grid=grid)
+    assert gain <= tol, (
+        f"profitable deviation {gain:.3e} > {tol:.1e} from symmetric "
+        f"p*={float(p_star):.6f} (gamma={params.gamma}, c={params.cost})")
+
+
+def assert_heterogeneous_ne(costs, gammas, dur, p, tol: float = NE_TOL,
+                            grid: int = 64) -> None:
+    gain = max_heterogeneous_deviation(costs, gammas, dur, p, grid=grid)
+    assert gain <= tol, (
+        f"profitable deviation {gain:.3e} > {tol:.1e} from profile "
+        f"{[round(float(x), 4) for x in jnp.asarray(p)]}")

@@ -5,8 +5,8 @@ import pytest
 
 import repro.core as C
 from repro.core.asymmetric import (HeterogeneousGame, best_response_dynamics,
-                                   planner_coordinate_descent,
-                                   verify_equilibrium)
+                                   planner_coordinate_descent)
+from helpers import assert_heterogeneous_ne, max_heterogeneous_deviation
 
 
 @pytest.fixture(scope="module")
@@ -21,7 +21,7 @@ def game():
 def test_br_dynamics_converge_to_exact_ne(game):
     p, conv, iters = best_response_dynamics(game, damping=0.6)
     assert conv, iters
-    assert verify_equilibrium(game, p) <= 1e-4
+    assert_heterogeneous_ne(game.costs, game.gammas, game.dur, p)
 
 
 def test_participation_monotone_in_cost(game):
@@ -39,6 +39,7 @@ def test_reduces_to_symmetric_case():
                           gammas=jnp.full((n,), 0.6), dur=dur)
     p, conv, _ = best_response_dynamics(g, damping=0.6, max_iters=300)
     assert conv
+    assert max_heterogeneous_deviation(g.costs, g.gammas, g.dur, p) <= 1e-4
     spread = float(jnp.max(p) - jnp.min(p))
     assert spread < 5e-3
     from repro.core.game import solve_symmetric_ne

@@ -8,6 +8,7 @@ from repro.core.duration import paper_duration_model
 from repro.core.game import (best_response, centralized_optimum, own_marginal,
                              solve_game, solve_symmetric_ne)
 from repro.core.utility import UtilityParams, symmetric_player_utility
+from helpers import assert_symmetric_ne
 
 
 @pytest.fixture(scope="module")
@@ -25,11 +26,14 @@ def test_ne_is_root_of_marginal(dur):
 
 
 def test_ne_no_profitable_deviation(dur):
-    """Global best-response check on the solved equilibria."""
+    """Certify the solved equilibria: no profitable unilateral deviation,
+    neither on the shared certification grid nor at the golden-refined
+    global best response."""
     up = UtilityParams(gamma=0.6, cost=2.0, n_nodes=50)
     nes = solve_symmetric_ne(up, dur)
     assert nes
     for p_star in nes:
+        assert_symmetric_ne(p_star, up, dur)
         u_eq = float(symmetric_player_utility(jnp.asarray(p_star),
                                               jnp.asarray(p_star), up, dur))
         br, u_br = best_response(p_star, up, dur)

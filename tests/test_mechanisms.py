@@ -9,8 +9,10 @@ from repro.core.game import (P_MIN, centralized_optimum, solve_game,
                              solve_symmetric_ne)
 from repro.core.utility import UtilityParams
 from repro.mechanisms import (AoIRewardMechanism, StackelbergPlanner,
-                              calibrate_gamma, evaluate_mechanism,
-                              solve_batched, solve_scenarios)
+                              calibrate_gamma, calibrate_gamma_heterogeneous,
+                              evaluate_mechanism, solve_batched,
+                              solve_scenarios)
+from helpers import assert_heterogeneous_ne, assert_symmetric_ne
 
 N = 50
 # (gamma, cost) settings spanning interior, multi-NE, and corner-collapse
@@ -121,6 +123,8 @@ def test_calibration_closes_the_poa_gap(dur):
     assert cal.gamma_star > 0.0
     assert rep.individually_rational
     assert rep.planner_budget >= 0.0
+    # the worst induced NE is a certified equilibrium of the induced game
+    assert_symmetric_ne(rep.ne_p, rep.induced_params, dur)
 
 
 def test_calibration_reports_unreachable_targets(dur):
@@ -144,6 +148,60 @@ def test_aoi_transfer_nonnegative(dur):
         assert mech.transfer(p, base) >= 0.0
     assert mech.transfer(P_MIN, base) == pytest.approx(0.0)
     assert mech.induced_params(base).gamma == pytest.approx(0.7)
+
+
+# ---- heterogeneous-population calibration ----------------------------------
+
+HET_N = 12
+
+
+@pytest.fixture(scope="module")
+def het_dur():
+    from repro.core.duration import theoretical_duration
+    return theoretical_duration(n_nodes=HET_N, d_inf=35.0, slope=8.0)
+
+
+@pytest.fixture(scope="module")
+def het_costs():
+    return jnp.asarray(np.linspace(0.5, 8.0, HET_N))
+
+
+def test_heterogeneous_calibration_hits_target(het_dur, het_costs):
+    cal = calibrate_gamma_heterogeneous(het_costs, het_dur, target_poa=1.05,
+                                        damping=0.6, max_iters=300)
+    assert cal.achieved
+    assert cal.poa <= 1.05 + 1e-9
+    assert cal.gamma_star > 0.0  # the selfish fleet misses the target...
+    assert float(cal.grid_poas[0]) > 1.05  # ...so γ = 0 alone is not enough
+    assert cal.deviation <= 1e-4  # the calibrated NE is certified
+    # γ* is minimal on the scan: every smaller grid γ misses the target
+    smaller = np.asarray(cal.grid_gammas) < cal.gamma_star
+    assert np.all(np.asarray(cal.grid_poas)[smaller] > 1.05)
+    # and the mechanism's induced NE really is an equilibrium of the
+    # γ-shifted heterogeneous game
+    gammas = jnp.full((HET_N,), cal.gamma_star)
+    rep = cal.grid_report
+    assert rep.batch == len(np.asarray(cal.grid_gammas))
+    from repro.core.asymmetric_batched import solve_heterogeneous
+    sol = solve_heterogeneous(het_costs, gammas, het_dur, damping=0.6,
+                              max_iters=300)
+    p, conv, _ = sol.single()
+    assert conv
+    assert_heterogeneous_ne(het_costs, gammas, het_dur, p)
+
+
+def test_heterogeneous_calibration_unreachable_target(het_dur, het_costs):
+    cal = calibrate_gamma_heterogeneous(het_costs, het_dur,
+                                        target_poa=1.0 + 1e-9, gamma_max=1.0,
+                                        coarse=8, damping=0.6, max_iters=300)
+    assert not cal.achieved
+    # best-effort fallback: the scan's best γ, never a blindly-maximal one
+    poas = np.asarray(cal.grid_poas)
+    best = int(np.argmin(poas))
+    assert cal.gamma_star == pytest.approx(float(cal.grid_gammas[best]))
+    assert cal.poa == pytest.approx(float(poas[best]))
+    # never worse than applying no mechanism at all (γ = 0 is on the grid)
+    assert cal.poa <= float(poas[0]) + 1e-12
 
 
 # ---- Stackelberg pricing ---------------------------------------------------

@@ -1,0 +1,87 @@
+"""Hypothesis property tests for the Poisson-Binomial stack.
+
+Invariants pinned here (across random p vectors *including* the p ∈ {0, 1}
+corners, which the generic float strategy rarely lands on exactly):
+
+* the DFT closed form (paper eq. 9) agrees with the O(N²) convolution
+  recursion oracle;
+* every pmf sums to 1;
+* the mean equals Σ p_i;
+* leave-one-out deconvolution inverts convolution (both directions), the
+  identity the batched heterogeneous engine's O(N) Gauss-Seidel step rests
+  on.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die, without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.poibin import (poibin_convolve, poibin_mean, poibin_pmf,
+                               poibin_pmf_loo, poibin_pmf_recursive)
+
+# Probabilities with the corners (and the deconvolution direction switch at
+# 1/2) explicitly over-weighted: plain floats(0, 1) almost never draws them.
+prob = st.one_of(st.sampled_from([0.0, 0.5, 1.0]),
+                 st.floats(0.0, 1.0, allow_nan=False))
+prob_vectors = st.lists(prob, min_size=1, max_size=24)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prob_vectors)
+def test_dft_matches_recursive_oracle(p):
+    dft = np.asarray(poibin_pmf(jnp.asarray(p)))
+    rec = np.asarray(poibin_pmf_recursive(jnp.asarray(p)))
+    np.testing.assert_allclose(dft, rec, atol=1e-8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prob_vectors)
+def test_pmf_sums_to_one(p):
+    for pmf in (poibin_pmf(jnp.asarray(p)),
+                poibin_pmf_recursive(jnp.asarray(p))):
+        pmf = np.asarray(pmf)
+        assert pmf.shape == (len(p) + 1,)
+        assert np.all(pmf >= -1e-12)
+        assert abs(pmf.sum() - 1.0) < 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(prob_vectors)
+def test_mean_equals_sum_of_p(p):
+    k = np.arange(len(p) + 1)
+    want = float(poibin_mean(jnp.asarray(p)))
+    for pmf in (poibin_pmf(jnp.asarray(p)),
+                poibin_pmf_recursive(jnp.asarray(p))):
+        assert float(k @ np.asarray(pmf)) == pytest.approx(want, abs=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prob_vectors, st.data())
+def test_loo_deconvolution_inverts_convolution(p, data):
+    """Dividing node i's [1-p_i, p_i] factor out of the full pmf recovers
+    the pmf of the other nodes; folding it back recovers the full pmf."""
+    i = data.draw(st.integers(0, len(p) - 1), label="node")
+    full = poibin_pmf_recursive(jnp.asarray(p))
+    loo = poibin_pmf_loo(full, p[i])
+    rest = poibin_pmf_recursive(jnp.asarray(p[:i] + p[i + 1:]))
+    np.testing.assert_allclose(np.asarray(loo[:-1]), np.asarray(rest),
+                               atol=1e-9)
+    assert float(loo[-1]) == 0.0
+    back = poibin_convolve(loo, p[i])
+    np.testing.assert_allclose(np.asarray(back), np.asarray(full),
+                               atol=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prob_vectors, prob)
+def test_convolve_step_extends_recursion(p, q):
+    """poibin_convolve(·, q) is exactly one step of the recursion: folding a
+    new node q into pmf(p) equals pmf(p + [q])."""
+    base = poibin_pmf_recursive(jnp.asarray(p))
+    padded = jnp.concatenate([base, jnp.zeros((1,), base.dtype)])
+    got = poibin_convolve(padded, q)
+    want = poibin_pmf_recursive(jnp.asarray(p + [q]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-12)
