@@ -1,0 +1,166 @@
+"""Table II-style campaign sweep: scan-fused engine vs. Python round loop.
+
+The paper's Table II / Figs. 4-5 sweep full FedAvg campaigns over
+participation probabilities. This benchmark runs a B >= 32 scenario sweep
+two ways over the identical task:
+
+* ``reference`` — loop :func:`run_simulation_reference` (the seed
+  Python-per-round simulator) over scenarios. Each call re-traces its round
+  program and pays per-round dispatch + eager ledger/tracker updates — the
+  cost of the unfused design. A ``--sample`` subset is timed and
+  extrapolated (pass ``--full-reference`` to loop every scenario).
+* ``scan-fused`` — one :func:`repro.federated.campaign.run_campaigns`
+  call: ``lax.scan`` over rounds, ``vmap`` over scenarios, one jitted XLA
+  program (compile reported separately, then a warm timed run).
+
+Equivalence of the two engines is asserted in
+``tests/test_federated.py::test_campaign_engine_matches_reference``; here we
+only measure. Emits ``name,us_per_call,derived`` CSV rows, a ``speedup``
+row (acceptance bar: >= 50x), and ``BENCH_campaign.json`` for the perf
+trajectory.
+
+Run:  PYTHONPATH=src:. python benchmarks/campaign_sweep.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.data.synthetic import SyntheticCifar
+from repro.federated.campaign import build_campaign, run_campaigns
+from repro.federated.simulation import FLConfig, run_simulation_reference
+from repro.optim import sgd
+from benchmarks.common import header, record
+
+HIDDEN = 16
+
+
+def make_task(image_shape=(8, 8, 3), noise=3.0):
+    """A small learnable classification task (CIFAR stand-in, shrunk so the
+    sweep measures engine overhead, not matmul throughput)."""
+    data = SyntheticCifar(noise=noise, image_shape=image_shape)
+    d = int(np.prod(image_shape))
+
+    def init_params(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (d, HIDDEN)) * d ** -0.5,
+                "b1": jnp.zeros(HIDDEN),
+                "w2": jax.random.normal(k2, (HIDDEN, 10)) * HIDDEN ** -0.5,
+                "b2": jnp.zeros(10)}
+
+    def fwd(p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def loss_fn(p, b):
+        lp = jax.nn.log_softmax(fwd(p, b["images"]))
+        return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1))
+
+    def eval_fn(p, b):
+        return jnp.mean(jnp.argmax(fwd(p, b["images"]), -1) == b["labels"])
+
+    def client_data(cid, rnd, n, steps):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), cid), rnd)
+        return jax.vmap(lambda k: data.batch(k, n))(
+            jax.random.split(key, steps))
+
+    return data, init_params, loss_fn, eval_fn, client_data
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=32)
+    ap.add_argument("--sample", type=int, default=3,
+                    help="reference scenarios to time (extrapolated to all)")
+    ap.add_argument("--full-reference", action="store_true",
+                    help="loop the reference simulator over every scenario")
+    ap.add_argument("--json", default="BENCH_campaign.json")
+    args = ap.parse_args()
+
+    data, init_params, loss_fn, eval_fn, client_data = make_task()
+    fl = FLConfig(n_clients=10, local_steps=1, batch_per_client=8,
+                  max_rounds=50, target_acc=0.73, seed=1)
+    val = data.val_set(128)
+    opt = sgd(0.15)
+    ps = jnp.asarray(np.linspace(0.1, 0.9, args.scenarios), jnp.float32)
+    header()
+
+    # -- scan-fused: compile once, then one warm timed sweep -----------------
+    engine = build_campaign(fl, init_params, loss_fn, eval_fn, client_data,
+                            val, opt)
+    t0 = time.perf_counter()
+    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data, val,
+                        opt, ps, engine=engine)
+    jax.block_until_ready(res.energy_wh)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data, val,
+                        opt, ps, engine=engine)
+    jax.block_until_ready(res.energy_wh)
+    t_fused = time.perf_counter() - t0
+    n_conv = int(jnp.sum(res.converged))
+    record("campaign_sweep.fused_total", t_fused * 1e6,
+           f"{args.scenarios} campaigns x {fl.max_rounds} rounds; "
+           f"{n_conv} converged; compile {t_cold:.1f}s")
+
+    # -- reference loop ------------------------------------------------------
+    if args.full_reference:
+        idx = np.arange(args.scenarios)
+    else:
+        idx = np.linspace(0, args.scenarios - 1,
+                          min(args.sample, args.scenarios)).astype(int)
+    t0 = time.perf_counter()
+    ref_rounds = {}
+    for i in idx:
+        r = run_simulation_reference(fl, init_params, loss_fn, eval_fn,
+                                     client_data, val, opt, p=float(ps[i]))
+        ref_rounds[int(i)] = r.rounds
+    t_ref_sample = time.perf_counter() - t0
+    t_ref = t_ref_sample * (args.scenarios / len(idx))
+    tag = ("measured" if args.full_reference
+           else f"extrapolated from {len(idx)}")
+    record("campaign_sweep.reference_total", t_ref * 1e6,
+           f"{args.scenarios} campaigns ({tag})")
+
+    # sanity: realized rounds agree wherever the reference actually ran
+    fused_rounds = {i: int(res.rounds[i]) for i in ref_rounds}
+    assert fused_rounds == ref_rounds, (fused_rounds, ref_rounds)
+
+    speedup = t_ref / t_fused
+    record("campaign_sweep.speedup", speedup,
+           f"target >= 50x; fused {t_fused:.2f}s vs reference {t_ref:.1f}s")
+
+    payload = {
+        "scenarios": args.scenarios,
+        "max_rounds": fl.max_rounds,
+        "n_clients": fl.n_clients,
+        "converged": n_conv,
+        "fused_s": round(t_fused, 4),
+        "fused_compile_s": round(t_cold, 2),
+        "reference_s": round(t_ref, 2),
+        "reference_timing": tag,
+        "speedup": round(speedup, 1),
+        "rounds_by_p": {f"{float(ps[i]):.3f}": int(res.rounds[i])
+                        for i in range(args.scenarios)},
+        "energy_wh_by_p": {f"{float(ps[i]):.3f}": float(res.energy_wh[i])
+                           for i in range(args.scenarios)},
+        "mean_aoi_by_p": {f"{float(ps[i]):.3f}": float(res.mean_aoi[i])
+                          for i in range(args.scenarios)},
+    }
+    pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\nfused sweep: {t_fused:.2f}s for {args.scenarios} campaigns "
+          f"({t_fused / args.scenarios * 1e3:.1f} ms/campaign)")
+    print(f"reference:   {t_ref:.1f}s ({tag})")
+    print(f"speedup: {speedup:.1f}x  -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic import SyntheticCifar
-from repro.federated.simulation import FLConfig, run_simulation
+from repro.federated.campaign import run_campaigns
+from repro.federated.simulation import FLConfig
 from repro.optim import sgd
 
 N_CLIENTS = 16
@@ -68,19 +69,21 @@ def build_task(alpha: float | None):
 def main():
     print(f"{'regime':<16}{'p':>6}{'rounds':>8}{'energy Wh':>11}")
     results = {}
+    ps = (0.25, 0.7)
     for alpha, label in [(None, "iid"), (0.1, "dirichlet(0.1)")]:
         data, init_params, loss_fn, eval_fn, client_data = build_task(alpha)
-        for p in (0.25, 0.7):
-            fl = FLConfig(n_clients=N_CLIENTS, local_steps=1,
-                          batch_per_client=4, max_rounds=100,
-                          target_acc=0.73, seed=4)
-            res = run_simulation(fl, init_params, loss_fn, eval_fn,
-                                 client_data, data.val_set(512), sgd(0.12),
-                                 p=p)
-            results[(label, p)] = res.rounds
-            print(f"{label:<16}{p:>6.2f}{res.rounds:>8}"
-                  f"{res.energy_wh:>11.1f}"
-                  + ("" if res.converged else "  (no convergence)"))
+        fl = FLConfig(n_clients=N_CLIENTS, local_steps=1,
+                      batch_per_client=4, max_rounds=100,
+                      target_acc=0.73, seed=4)
+        # both p scenarios ride one scan-fused campaign program
+        res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data,
+                            data.val_set(512), sgd(0.12),
+                            jnp.asarray(ps, jnp.float32))
+        for i, p in enumerate(ps):
+            results[(label, p)] = int(res.rounds[i])
+            print(f"{label:<16}{p:>6.2f}{int(res.rounds[i]):>8}"
+                  f"{float(res.energy_wh[i]):>11.1f}"
+                  + ("" if bool(res.converged[i]) else "  (no convergence)"))
     iid_ratio = results[("iid", 0.25)] / max(results[("iid", 0.7)], 1)
     nid_ratio = results[("dirichlet(0.1)", 0.25)] / max(
         results[("dirichlet(0.1)", 0.7)], 1)

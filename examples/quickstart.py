@@ -1,7 +1,8 @@
 """Quickstart: the paper in 60 seconds.
 
 1. Solve the participation game (NE, centralized optimum, PoA).
-2. Run a small participatory-FL simulation under each solution.
+2. Run participatory FL under each solution — all scenarios batched into
+   ONE scan-fused campaign program (repro.federated.campaign).
 3. Compare realized energy — the Tragedy of the Commons, measured.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -11,7 +12,8 @@ import jax.numpy as jnp
 
 from repro.core.controller import ParticipationController
 from repro.data.synthetic import SyntheticCifar
-from repro.federated.simulation import FLConfig, run_simulation
+from repro.federated.campaign import run_campaigns
+from repro.federated.simulation import FLConfig
 from repro.optim import sgd
 
 
@@ -55,30 +57,35 @@ def main():
     print(f"  Price of Anarchy           = {diag['poa']:.3f}"
           f"  (paper: 1.28 w/o incentive, ~1 with AoI incentive)")
 
-    print("\n=== 2. Run participatory FL under each solution ===")
+    print("\n=== 2. Run participatory FL under each solution "
+          "(one scan-fused campaign batch) ===")
     data, init_params, loss_fn, eval_fn, client_data = make_task()
-    results = {}
     scenarios = [
         ("selfish NE (no incentive)", dict(gamma=0.0, mode="ne_worst")),
         ("NE + AoI incentive", dict(gamma=0.6, mode="ne")),
         ("centralized optimum", dict(gamma=0.0, mode="centralized")),
     ]
-    for label, kw in scenarios:
-        c = ParticipationController(n_nodes=50, cost=2.0, **kw)
-        p = c.participation_probability()
-        fl = FLConfig(n_clients=50, local_steps=1, batch_per_client=2,
-                      max_rounds=120, target_acc=0.73)
-        res = run_simulation(fl, init_params, loss_fn, eval_fn, client_data,
-                             data.val_set(512), sgd(0.15), p=p, controller=c)
-        results[label] = res
-        print(f"  {label:28s} p={p:.2f}: {res.rounds} rounds, "
-              f"{res.energy_wh:7.1f} Wh "
-              f"(participation rate {res.participation_rate:.2f})")
+    ctrls = [ParticipationController(n_nodes=50, cost=2.0, **kw)
+             for _, kw in scenarios]
+    ps = jnp.asarray([c.participation_probability() for c in ctrls],
+                     jnp.float32)
+    fl = FLConfig(n_clients=50, local_steps=1, batch_per_client=2,
+                  max_rounds=120, target_acc=0.73)
+    # Every scenario runs inside ONE jitted lax.scan+vmap program; the old
+    # one-scenario-per-call path survives as run_simulation (same engine,
+    # B = 1) and run_simulation_reference (the Python-loop test oracle).
+    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data,
+                        data.val_set(512), sgd(0.15), ps,
+                        energy=[c.energy_params for c in ctrls])
+    for i, (label, _) in enumerate(scenarios):
+        print(f"  {label:28s} p={float(ps[i]):.2f}: "
+              f"{int(res.rounds[i])} rounds, "
+              f"{float(res.energy_wh[i]):7.1f} Wh "
+              f"(participation rate {float(res.participation_rate[i]):.2f}, "
+              f"mean AoI {float(res.mean_aoi[i]):.2f})")
 
     print("\n=== 3. The energy verdict ===")
-    e_ne = results["selfish NE (no incentive)"].energy_wh
-    e_inc = results["NE + AoI incentive"].energy_wh
-    e_opt = results["centralized optimum"].energy_wh
+    e_ne, e_inc, e_opt = (float(x) for x in res.energy_wh)
     print(f"  selfish / centralized energy ratio:   {e_ne / e_opt:.3f}"
           f"   (paper: >= 1.28 -> the Tragedy of the Commons)")
     print(f"  incentive / centralized energy ratio: {e_inc / e_opt:.3f}"

@@ -8,13 +8,20 @@ reward ratio
 
 using E[Y] = 1/p and E[Y^2] = (2 - p)/p^2. The paper rewards participation
 with ``-gamma * log(E[delta])`` inside the utility.
+
+:class:`AoITracker` is the *realized* counterpart: a pytree that rides in a
+``lax.scan`` carry (one update per FL round) and reports the empirical
+per-node mean age, so simulated campaigns can be checked against the renewal
+formula above.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["expected_aoi", "log_aoi", "simulate_aoi"]
+__all__ = ["expected_aoi", "log_aoi", "simulate_aoi", "AoITracker"]
 
 
 def expected_aoi(p: jax.Array) -> jax.Array:
@@ -43,3 +50,53 @@ def simulate_aoi(p: float, n_rounds: int, key: jax.Array) -> jax.Array:
 
     _, ages = jax.lax.scan(step, 0.0, participate)
     return jnp.mean(ages)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AoITracker:
+    """Per-node realized AoI over a participation sample path.
+
+    Same sampling convention as :func:`simulate_aoi` — the age is read
+    mid-round (pre-update age + 1/2), so the long-run mean matches the
+    renewal formula E[delta] = 1/p - 1/2. All fields are jnp arrays; the
+    tracker is a registered pytree, so it can be a ``lax.scan`` carry leaf
+    inside jitted campaign loops.
+
+    Attributes:
+        age: ``(N,)`` rounds since each node's last participation.
+        cum_age: ``(N,)`` sum of mid-round sampled ages.
+        rounds: number of rounds tracked.
+    """
+
+    age: jax.Array
+    cum_age: jax.Array
+    rounds: jax.Array
+
+    @staticmethod
+    def create(n_nodes: int) -> "AoITracker":
+        return AoITracker(
+            age=jnp.zeros((n_nodes,), jnp.float64),
+            cum_age=jnp.zeros((n_nodes,), jnp.float64),
+            rounds=jnp.zeros((), jnp.int64),
+        )
+
+    def update(self, mask: jax.Array) -> "AoITracker":
+        """Record one round: sample ages mid-round, reset participants."""
+        joined = jnp.asarray(mask, bool)
+        return AoITracker(
+            age=jnp.where(joined, 0.0, self.age + 1.0),
+            cum_age=self.cum_age + self.age + 0.5,
+            rounds=self.rounds + 1,
+        )
+
+    @property
+    def per_node_aoi(self) -> jax.Array:
+        """``(N,)`` empirical mean age per node (``(B, N)`` when the tracker
+        carries a leading batch axis, e.g. out of a vmapped campaign)."""
+        return self.cum_age / jnp.maximum(self.rounds, 1)[..., None]
+
+    @property
+    def mean_aoi(self) -> jax.Array:
+        """Fleet-mean realized AoI (``(B,)`` for a batched tracker)."""
+        return jnp.mean(self.per_node_aoi, axis=-1)

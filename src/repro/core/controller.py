@@ -129,6 +129,85 @@ class ParticipationController:
                 mech, self.utility_params, self.duration_model)
         return self._mech_report
 
+    def solve_batched(
+        self,
+        gammas: jax.Array | float | None = None,
+        costs: jax.Array | float | None = None,
+        mode: str | None = None,
+        *,
+        gamma_max: float = 5.0,
+        coarse: int = 64,
+    ) -> jax.Array:
+        """Participation probabilities for a whole (γ, c) scenario grid.
+
+        The batched counterpart of :meth:`participation_probability`: all
+        scenarios are resolved through the batched game solver
+        (:func:`repro.mechanisms.batched.solve_batched`) with no
+        Python-level per-scenario solves — the path the campaign engine
+        (:mod:`repro.federated.campaign`) feeds on for Table II-style
+        sweeps.
+
+        Args:
+            gammas / costs: scalars or broadcast-compatible ``(B,)`` arrays
+                (default: this controller's own γ / c).
+            mode: overrides ``self.mode``. Semantics per scenario match the
+                scalar path — ``"ne"`` best-cost NE, ``"ne_worst"``
+                worst-cost NE, ``"centralized"`` planner optimum,
+                ``"fixed"`` the fixed probability, ``"mechanism"`` the worst
+                NE induced by a γ-grid-calibrated AoI reward (grid
+                resolution ``gamma_max / (coarse - 1)``; the scalar path
+                refines by bisection, so mechanism probabilities agree only
+                to that resolution). Scenarios with no NE resolve to 0.0.
+
+        Returns:
+            ``(B,)`` probabilities.
+        """
+        # Lazy import — repro.mechanisms imports repro.core at load time.
+        from repro.mechanisms.batched import solve_batched
+
+        mode = mode or self.mode
+        g = jnp.atleast_1d(jnp.asarray(
+            self.gamma if gammas is None else gammas, jnp.float64))
+        c = jnp.atleast_1d(jnp.asarray(
+            self.cost if costs is None else costs, jnp.float64))
+        g, c = jnp.broadcast_arrays(g, c)
+        if mode == "fixed":
+            return jnp.full(g.shape, self.fixed_p, jnp.float64)
+        if mode == "mechanism":
+            if self.mechanism is not None:
+                # Honour the explicitly supplied mechanism (scalar-path
+                # parity): apply its transfer to every scenario's utilities,
+                # then one batched solve of the induced games.
+                induced = [self.mechanism.induced_params(UtilityParams(
+                    gamma=float(gb), cost=float(cb), n_nodes=self.n_nodes))
+                    for gb, cb in zip(g, c)]
+                sol = solve_batched(
+                    jnp.asarray([u.gamma for u in induced]),
+                    jnp.asarray([u.cost for u in induced]),
+                    self.duration_model)
+                return jnp.nan_to_num(sol.worst_ne, nan=0.0)
+            batch = g.shape[0]
+            grid = jnp.linspace(0.0, gamma_max, coarse)
+            sol = solve_batched((g[:, None] + grid[None, :]).reshape(-1),
+                                jnp.repeat(c, coarse), self.duration_model)
+            poa = sol.poa.reshape(batch, coarse)
+            worst_ne = sol.worst_ne.reshape(batch, coarse)
+            ok = poa <= self.target_poa + 1e-9
+            # Smallest γ meeting the target; else the best PoA seen
+            # (calibrate_gamma's achieved=False fallback).
+            first_ok = jnp.argmax(ok, axis=1)
+            best = jnp.argmin(jnp.where(jnp.isnan(poa), jnp.inf, poa), axis=1)
+            idx = jnp.where(jnp.any(ok, axis=1), first_ok, best)
+            p = jnp.take_along_axis(worst_ne, idx[:, None], axis=1)[:, 0]
+            return jnp.nan_to_num(p, nan=0.0)
+        sol = solve_batched(g, c, self.duration_model)
+        if mode == "centralized":
+            return sol.opt_p
+        if mode not in ("ne", "ne_worst"):
+            raise ValueError(f"unknown mode {mode!r}")
+        p = sol.worst_ne if mode == "ne_worst" else sol.best_ne
+        return jnp.nan_to_num(p, nan=0.0)
+
     def participation_probability(self) -> float:
         if self.mode == "fixed":
             return float(self.fixed_p)

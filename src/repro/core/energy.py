@@ -166,9 +166,24 @@ class EnergyLedger:
         )
 
     def record_round(self, mask: jax.Array, params: EnergyParams) -> "EnergyLedger":
+        return self.record_round_j(mask, params.e_participant_j,
+                                   params.e_idle_j)
+
+    def record_round_j(
+        self,
+        mask: jax.Array,
+        e_participant_j: jax.Array | float,
+        e_idle_j: jax.Array | float,
+    ) -> "EnergyLedger":
+        """Record one round from raw per-round joule rates.
+
+        Unlike :meth:`record_round` the rates may be traced scalars, so a
+        batch of scenarios with *different* :class:`EnergyParams` can be
+        ``vmap``-ed over ``(e_participant_j, e_idle_j)`` arrays inside one
+        jitted campaign program.
+        """
         maskf = jnp.asarray(mask, jnp.float64)
-        node_j = (maskf * params.e_participant_j
-                  + (1.0 - maskf) * params.e_idle_j)
+        node_j = maskf * e_participant_j + (1.0 - maskf) * e_idle_j
         return EnergyLedger(
             per_node_j=self.per_node_j + node_j,
             rounds=self.rounds + 1,

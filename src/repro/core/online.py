@@ -57,6 +57,44 @@ class OnlineDurationEstimator:
         self._xty += x * max(progress, 0.0)
         self._n_obs += 1
 
+    def observe_batch(self, participants, progress) -> None:
+        """Vectorized :meth:`observe` over whole campaigns.
+
+        Equivalent to calling ``observe`` per round (RLS normal equations
+        are additive), but one matmul per campaign — the ingestion path for
+        the scan-fused engine's ``(rounds,)`` histories.
+        """
+        k = np.asarray(participants, np.float64).ravel()
+        g = np.clip(np.asarray(progress, np.float64).ravel(), 0.0, None)
+        if k.shape != g.shape:
+            raise ValueError(f"participants {k.shape} vs progress {g.shape}")
+        x = self._features(k)
+        self._xtx += x.T @ x
+        self._xty += x.T @ g
+        self._n_obs += int(k.size)
+
+    def ingest_trajectory(self, participants, acc_history,
+                          target_acc: float) -> None:
+        """Feed one campaign's realized trajectory.
+
+        ``participants``/``acc_history`` are the per-round participant
+        counts and validation accuracies of the rounds actually run (slice a
+        :class:`~repro.federated.campaign.CampaignResult`'s histories with
+        ``[:rounds[i]]``). Per-round progress is the accuracy gain
+        normalized by the initial gap to ``target_acc``.
+        """
+        acc = np.asarray(acc_history, np.float64).ravel()
+        k = np.asarray(participants, np.float64).ravel()
+        if acc.size < 2:
+            return
+        gap = target_acc - acc[0]
+        if gap <= 1e-6:
+            return  # started at/above target: no informative progress signal
+        # acc[t] is measured AFTER round t, so round t's participants k[t]
+        # produced the gain acc[t] - acc[t-1]; round 0's gain is unobservable
+        # (no pre-round accuracy) and is dropped rather than fabricated.
+        self.observe_batch(k[1:acc.size], np.diff(acc) / gap)
+
     @property
     def n_obs(self) -> int:
         return self._n_obs

@@ -1,0 +1,236 @@
+"""Scan-fused multi-scenario FL campaign engine.
+
+The paper's headline artifacts (Table II, Figs. 4-5) are *sweeps*: full
+FedAvg campaigns repeated over participation probabilities or (gamma, cost)
+game settings. :func:`repro.federated.simulation.run_simulation_reference`
+runs one scenario per call through a Python round loop — fine as a test
+oracle, hopeless for a 32+-scenario sweep (per-round dispatch overhead times
+rounds times scenarios).
+
+Here the whole campaign is one XLA program:
+
+* one **round** = draw Bernoulli masks → vmap local training → masked
+  FedAvg merge → validation → :class:`EnergyLedger` update →
+  :class:`ConvergenceTracker` update → :class:`AoITracker` update;
+* the round loop is a ``lax.scan`` with all trackers in the carry.
+  Convergence cannot break a fixed-shape scan, so post-convergence rounds
+  are masked to accounting no-ops (model frozen, ledger/tracker/AoI
+  untouched) — realized energy, participation, and AoI therefore match the
+  early-stopping reference exactly;
+* a batch of scenarios — per-scenario ``p`` vectors (or probabilities
+  resolved from a (gamma, cost) grid via
+  :meth:`repro.core.controller.ParticipationController.solve_batched`),
+  seeds, and energy rates — is ``jax.vmap``-ed over the scanned campaign.
+
+``benchmarks/campaign_sweep.py`` measures the result: a Table II-style
+sweep compiles to one jitted program and runs orders of magnitude faster
+than looping the reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aoi import AoITracker
+from repro.core.energy import J_PER_WH, EnergyLedger, EnergyParams
+from repro.federated.client import make_local_train
+from repro.federated.server import ConvergenceTracker, fedavg_merge
+from repro.optim.base import Optimizer
+
+__all__ = ["CampaignResult", "build_campaign", "run_campaigns"]
+
+
+def _tree_select(cond: jax.Array, on_true, on_false):
+    """Leafwise ``where`` — keeps scan carries type-stable under masking."""
+    return jax.tree.map(lambda t, f: jnp.where(cond, t, f), on_true, on_false)
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """Batched outcome of B scan-fused campaigns (leading axis B).
+
+    ``acc_history``/``k_history`` are full ``(B, max_rounds)`` arrays;
+    post-convergence entries repeat the last converged accuracy and report
+    0 participants (the masked no-op rounds). Slice ``[:rounds[i]]`` for the
+    realized trajectory of scenario ``i``.
+    """
+
+    p: jax.Array                 # (B, N) per-node participation probability
+    seeds: jax.Array             # (B,)
+    converged_at: jax.Array      # (B,) round index or -1
+    converged: jax.Array         # (B,) bool
+    rounds: jax.Array            # (B,) realized rounds (early stop honoured)
+    energy_wh: jax.Array         # (B,) realized task energy
+    acc_history: jax.Array       # (B, R)
+    k_history: jax.Array         # (B, R) participants per round
+    participation_rate: jax.Array  # (B,) mean realized participation
+    per_node_aoi: jax.Array      # (B, N) realized mean age per node
+    mean_aoi: jax.Array          # (B,) fleet-mean realized AoI
+    ledger: EnergyLedger         # batched (leaves carry leading B axis)
+    aoi: AoITracker              # batched
+
+    @property
+    def batch(self) -> int:
+        return int(self.rounds.shape[0])
+
+    def scenario_ledger(self, i: int) -> EnergyLedger:
+        """The i-th scenario's ledger as an unbatched :class:`EnergyLedger`."""
+        return jax.tree.map(lambda leaf: leaf[i], self.ledger)
+
+    def summary(self, i: int) -> dict[str, Any]:
+        s = self.scenario_ledger(i).summary()
+        s.update(converged=bool(self.converged[i]),
+                 rounds=int(self.rounds[i]),
+                 mean_aoi=float(self.mean_aoi[i]))
+        return s
+
+
+def build_campaign(
+    fl,
+    init_params: Callable[[jax.Array], dict],
+    loss_fn: Callable,
+    eval_fn: Callable,
+    client_data: Callable,
+    val_batch: dict,
+    opt: Optimizer,
+):
+    """Compile the campaign engine for one task definition.
+
+    Args mirror :func:`repro.federated.simulation.run_simulation`; ``fl`` is
+    an :class:`~repro.federated.simulation.FLConfig` (``max_rounds`` fixes
+    the static scan length).
+
+    Returns a jitted ``fn(p, seeds, e_participant_j, e_idle_j)`` mapping
+    ``(B, N)`` probabilities, ``(B,)`` seeds, and ``(B,)`` per-round joule
+    rates to the raw batched scan state (dict of params/ledger/tracker/aoi/
+    accs/ks). Use :func:`run_campaigns` for the friendly wrapper.
+    """
+    n = fl.n_clients
+    train_one = make_local_train(loss_fn, opt)
+
+    def one_campaign(p_vec, seed, e_participant_j, e_idle_j):
+        key = jax.random.PRNGKey(seed)
+        state0 = (
+            init_params(jax.random.fold_in(key, 1)),
+            EnergyLedger.create(n),
+            ConvergenceTracker.create(fl.target_acc, fl.consecutive),
+            AoITracker.create(n),
+            jnp.zeros((), jnp.float64),          # last recorded accuracy
+        )
+
+        def round_step(carry, r):
+            params, ledger, tracker, aoi, last_acc = carry
+            active = ~tracker.converged
+            # Same RNG stream as the Python-loop reference: masks (and hence
+            # energy/participation/AoI) are bitwise-identical per round.
+            rng = jax.random.fold_in(key, 10_000 + r)
+            mask = jax.random.bernoulli(rng, p_vec, (n,))
+            batches = jax.vmap(
+                lambda cid: client_data(cid, r, fl.batch_per_client,
+                                        fl.local_steps))(jnp.arange(n))
+            client_params, _ = jax.vmap(train_one, in_axes=(None, 0))(
+                params, batches)
+            merged = fedavg_merge(params, client_params, mask)
+            acc = eval_fn(merged, val_batch)
+
+            new_carry = (
+                _tree_select(active, merged, params),
+                _tree_select(active,
+                             ledger.record_round_j(mask, e_participant_j,
+                                                   e_idle_j), ledger),
+                tracker.masked_update(acc, jnp.asarray(r, jnp.int32), active),
+                _tree_select(active, aoi.update(mask), aoi),
+                jnp.where(active, acc, last_acc),
+            )
+            k = jnp.where(active, jnp.sum(jnp.asarray(mask, jnp.int32)), 0)
+            return new_carry, (new_carry[-1], k)
+
+        (params, ledger, tracker, aoi, _), (accs, ks) = jax.lax.scan(
+            round_step, state0, jnp.arange(fl.max_rounds))
+        return {"params": params, "ledger": ledger, "tracker": tracker,
+                "aoi": aoi, "accs": accs, "ks": ks}
+
+    return jax.jit(jax.vmap(one_campaign))
+
+
+def _energy_rates(energy, batch: int) -> tuple[jax.Array, jax.Array]:
+    if energy is None:
+        energy = EnergyParams()
+    if isinstance(energy, EnergyParams):
+        energy = [energy] * batch
+    if len(energy) != batch:
+        raise ValueError(f"{len(energy)} EnergyParams for {batch} scenarios")
+    e_part = jnp.asarray([e.e_participant_j for e in energy], jnp.float64)
+    e_idle = jnp.asarray([e.e_idle_j for e in energy], jnp.float64)
+    return e_part, e_idle
+
+
+def run_campaigns(
+    fl,
+    init_params: Callable[[jax.Array], dict],
+    loss_fn: Callable,
+    eval_fn: Callable,
+    client_data: Callable,
+    val_batch: dict,
+    opt: Optimizer,
+    p: jax.Array,
+    *,
+    energy: EnergyParams | Sequence[EnergyParams] | None = None,
+    seeds: Sequence[int] | jax.Array | None = None,
+    engine: Callable | None = None,
+) -> CampaignResult:
+    """Run B FedAvg campaigns as one jitted scan+vmap program.
+
+    Args:
+        p: scenario participation — scalar, ``(B,)`` symmetric
+            probabilities, or ``(B, N)`` per-node vectors.
+        energy: one shared :class:`EnergyParams` or one per scenario.
+        seeds: per-scenario PRNG seeds (default: ``fl.seed`` for all — the
+            scenarios then share model init and data streams, isolating the
+            effect of ``p``).
+        engine: a prebuilt :func:`build_campaign` program. Pass it when
+            sweeping repeatedly over one task so the XLA compile is paid
+            once (a fresh engine is built — and traced — per call
+            otherwise).
+    """
+    n = fl.n_clients
+    # Preserve the caller's p dtype: bernoulli draws its uniforms in p's
+    # dtype, so coercion here would change masks vs the reference loop.
+    p_arr = jnp.atleast_1d(jnp.asarray(p))
+    if p_arr.ndim == 1:
+        p_arr = jnp.broadcast_to(p_arr[:, None], (p_arr.shape[0], n))
+    batch = p_arr.shape[0]
+    seeds = (jnp.full((batch,), fl.seed, jnp.uint32) if seeds is None
+             else jnp.asarray(seeds, jnp.uint32))
+    if seeds.shape != (batch,):
+        raise ValueError(f"seeds {seeds.shape} for {batch} scenarios")
+    e_part, e_idle = _energy_rates(energy, batch)
+
+    fn = engine if engine is not None else build_campaign(
+        fl, init_params, loss_fn, eval_fn, client_data, val_batch, opt)
+    out = fn(p_arr, seeds, e_part, e_idle)
+
+    tracker, ledger, aoi = out["tracker"], out["ledger"], out["aoi"]
+    converged = tracker.converged_at >= 0
+    rounds = jnp.where(converged, tracker.converged_at + 1, fl.max_rounds)
+    per_node_aoi = aoi.per_node_aoi
+    return CampaignResult(
+        p=p_arr,
+        seeds=seeds,
+        converged_at=tracker.converged_at,
+        converged=converged,
+        rounds=rounds,
+        energy_wh=jnp.sum(ledger.per_node_j, axis=-1) / J_PER_WH,
+        acc_history=out["accs"],
+        k_history=out["ks"],
+        participation_rate=jnp.mean(
+            ledger.participation_counts
+            / jnp.maximum(ledger.rounds, 1)[:, None], axis=-1),
+        per_node_aoi=per_node_aoi,
+        mean_aoi=aoi.mean_aoi,
+        ledger=ledger,
+        aoi=aoi,
+    )

@@ -71,6 +71,14 @@ class ConvergenceTracker:
             target=self.target, needed=self.needed, streak=streak,
             converged_at=jnp.where(first, round_idx, self.converged_at))
 
+    def masked_update(self, acc: jax.Array, round_idx: jax.Array,
+                      active: jax.Array) -> "ConvergenceTracker":
+        """`update` when ``active`` else identity — for fixed-length scan
+        round loops where post-convergence rounds are accounting no-ops."""
+        upd = self.update(acc, round_idx)
+        return jax.tree.map(lambda new, old: jnp.where(active, new, old),
+                            upd, self)
+
     @property
     def converged(self) -> jax.Array:
         return self.converged_at >= 0

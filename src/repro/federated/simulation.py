@@ -2,17 +2,28 @@
 
 One round = (draw Bernoulli masks) → (vmap local training across clients)
 → (masked FedAvg merge) → (validation) → (energy ledger update) →
-(convergence check). The whole round is one jitted XLA program; the Python
-loop only handles early stopping and logging.
+(convergence check).
 
-``run_simulation`` is what the Table II benchmark sweeps over p; plugging the
-:class:`repro.core.controller.ParticipationController` in ``p_mode="ne"``
-gives the paper's distributed scenario, ``"centralized"`` the planner's.
+Two engines share that round definition:
+
+* :func:`run_simulation` — the production path. Delegates to the
+  scan-fused campaign engine (:mod:`repro.federated.campaign`): the whole
+  round loop is one ``lax.scan`` inside one jitted XLA program, with
+  post-convergence rounds masked to accounting no-ops.
+* :func:`run_simulation_reference` — the seed Python round loop with eager
+  early stopping, kept verbatim as the **test oracle** the engine is
+  regression-tested against (see ``tests/test_federated.py``).
+
+``run_simulation`` is what the Table II benchmark sweeps over p; plugging
+the :class:`repro.core.controller.ParticipationController` in
+``p_mode="ne"`` gives the paper's distributed scenario, ``"centralized"``
+the planner's. For sweeps of many scenarios at once, call
+:func:`repro.federated.campaign.run_campaigns` directly — one program for
+the whole grid instead of one ``run_simulation`` per point.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Callable, Optional
 
@@ -25,7 +36,8 @@ from repro.federated.client import local_train
 from repro.federated.server import ConvergenceTracker, fedavg_merge
 from repro.optim.base import Optimizer
 
-__all__ = ["FLConfig", "FLResult", "run_simulation"]
+__all__ = ["FLConfig", "FLResult", "run_simulation",
+           "run_simulation_reference"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +60,16 @@ class FLResult:
     participation_rate: float
     wall_s: float
     ledger_summary: dict
+    mean_aoi: float = float("nan")  # realized fleet AoI (scan engine only)
+
+
+def _resolve(p, energy, controller, n):
+    if controller is not None:
+        p = controller.participation_probability()
+        energy = controller.energy_params
+    energy = energy or EnergyParams()
+    p_vec = jnp.broadcast_to(jnp.asarray(p, jnp.float32), (n,))
+    return p_vec, energy
 
 
 def run_simulation(
@@ -61,18 +83,63 @@ def run_simulation(
     p: float | jax.Array,
     energy: EnergyParams | None = None,
     controller: Optional[ParticipationController] = None,
+    engine=None,
 ) -> FLResult:
     """Run FedAvg with Bernoulli(p) participation until convergence.
 
     ``p`` may be a scalar (symmetric) or an (N,) vector. If ``controller`` is
     given its probability overrides ``p`` and its energy params are used.
+
+    This is the B = 1 case of the scan-fused campaign engine; masks, ledger,
+    tracker, and accuracies match :func:`run_simulation_reference` (same RNG
+    streams, post-convergence rounds masked out). Each call traces and
+    compiles a fresh ``max_rounds`` scan — when calling repeatedly on one
+    task, build the program once with
+    :func:`repro.federated.campaign.build_campaign` and pass it as
+    ``engine`` (or better, batch the scenarios into one
+    :func:`~repro.federated.campaign.run_campaigns` call).
     """
-    if controller is not None:
-        p = controller.participation_probability()
-        energy = controller.energy_params
-    energy = energy or EnergyParams()
+    from repro.federated.campaign import run_campaigns
+
+    p_vec, energy = _resolve(p, energy, controller, fl.n_clients)
+    t0 = time.time()
+    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data,
+                        val_batch, opt, p_vec[None, :], energy=energy,
+                        seeds=[fl.seed], engine=engine)
+    wall = time.time() - t0
+    rounds = int(res.rounds[0])
+    return FLResult(
+        rounds=rounds,
+        converged=bool(res.converged[0]),
+        energy_wh=float(res.energy_wh[0]),
+        acc_history=[float(a) for a in res.acc_history[0][:rounds]],
+        participation_rate=float(res.participation_rate[0]),
+        wall_s=wall,
+        ledger_summary=res.scenario_ledger(0).summary(),
+        mean_aoi=float(res.mean_aoi[0]),
+    )
+
+
+def run_simulation_reference(
+    fl: FLConfig,
+    init_params: Callable[[jax.Array], dict],
+    loss_fn: Callable,
+    eval_fn: Callable,
+    client_data: Callable,
+    val_batch: dict,
+    opt: Optimizer,
+    p: float | jax.Array,
+    energy: EnergyParams | None = None,
+    controller: Optional[ParticipationController] = None,
+) -> FLResult:
+    """The seed Python-loop simulator — the scan engine's test oracle.
+
+    One jitted program per *round*, eager ledger/tracker updates, early
+    ``break`` on convergence. Kept unfused on purpose: it is the simplest
+    possible statement of the round semantics.
+    """
+    p_vec, energy = _resolve(p, energy, controller, fl.n_clients)
     n = fl.n_clients
-    p_vec = jnp.broadcast_to(jnp.asarray(p, jnp.float32), (n,))
 
     key = jax.random.PRNGKey(fl.seed)
     params = init_params(jax.random.fold_in(key, 1))

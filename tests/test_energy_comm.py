@@ -88,6 +88,83 @@ def test_task_energy_sums_rounds():
     assert float(e) == pytest.approx(6.5)
 
 
+def _random_masks(key, rounds, n):
+    return jax.random.bernoulli(key, 0.4, (rounds, n))
+
+
+def test_ledger_wh_additivity_over_round_batches():
+    """Ledger(A ++ B) == Ledger(A) continued with B, and its totals are the
+    sums of two fresh per-batch ledgers — Wh accounting is associative."""
+    ep = EnergyParams()
+    n = 6
+    ma = _random_masks(jax.random.PRNGKey(0), 5, n)
+    mb = _random_masks(jax.random.PRNGKey(1), 7, n)
+
+    def fold(led, masks):
+        for m in masks:
+            led = led.record_round(m, ep)
+        return led
+
+    joint = fold(EnergyLedger.create(n), jnp.concatenate([ma, mb]))
+    contin = fold(fold(EnergyLedger.create(n), ma), mb)
+    np.testing.assert_allclose(np.asarray(joint.per_node_j),
+                               np.asarray(contin.per_node_j))
+    assert int(joint.rounds) == int(contin.rounds) == 12
+    led_a = fold(EnergyLedger.create(n), ma)
+    led_b = fold(EnergyLedger.create(n), mb)
+    assert float(joint.total_wh) == pytest.approx(
+        float(led_a.total_wh) + float(led_b.total_wh), rel=1e-12)
+    np.testing.assert_array_equal(
+        np.asarray(joint.participation_counts),
+        np.asarray(led_a.participation_counts
+                   + led_b.participation_counts))
+
+
+def test_ledger_participant_idle_split_matches_mask_sums():
+    """per_node_j decomposes exactly into counts·E_part + idle·E_idle."""
+    ep = EnergyParams()
+    n = 9
+    masks = _random_masks(jax.random.PRNGKey(3), 11, n)
+    led = EnergyLedger.create(n)
+    for m in masks:
+        led = led.record_round(m, ep)
+    counts = np.asarray(masks).sum(axis=0)
+    np.testing.assert_array_equal(np.asarray(led.participation_counts),
+                                  counts)
+    want = counts * ep.e_participant_j + (11 - counts) * ep.e_idle_j
+    np.testing.assert_allclose(np.asarray(led.per_node_j), want, rtol=1e-12)
+
+
+def test_ledger_works_as_scan_carry():
+    """The ledger is a pytree: jitted lax.scan over masks == eager fold, and
+    flatten/unflatten round-trips (the campaign engine's carry contract)."""
+    ep = EnergyParams()
+    n = 5
+    masks = _random_masks(jax.random.PRNGKey(4), 8, n)
+
+    @jax.jit
+    def scan_ledger(masks):
+        def step(led, mask):
+            return led.record_round_j(mask, ep.e_participant_j,
+                                      ep.e_idle_j), led.rounds
+        return jax.lax.scan(step, EnergyLedger.create(n), masks)
+
+    scanned, round_trace = scan_ledger(masks)
+    eager = EnergyLedger.create(n)
+    for m in masks:
+        eager = eager.record_round(m, ep)
+    np.testing.assert_allclose(np.asarray(scanned.per_node_j),
+                               np.asarray(eager.per_node_j))
+    assert int(scanned.rounds) == int(eager.rounds) == 8
+    np.testing.assert_array_equal(np.asarray(round_trace), np.arange(8))
+
+    leaves, treedef = jax.tree.flatten(scanned)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    for a, b in zip(jax.tree.leaves(rebuilt), jax.tree.leaves(scanned)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(rebuilt.total_wh) == float(scanned.total_wh)
+
+
 def test_aoi_closed_form():
     for p in [0.1, 0.5, 0.9]:
         assert float(expected_aoi(jnp.asarray(p))) == pytest.approx(

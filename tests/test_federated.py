@@ -5,10 +5,13 @@ import numpy as np
 import pytest
 
 import repro.core  # noqa: F401
+from repro.core.aoi import expected_aoi
 from repro.core.controller import ParticipationController
+from repro.federated.campaign import run_campaigns
 from repro.federated.participation import mask_schedule, round_mask
 from repro.federated.server import ConvergenceTracker, fedavg_merge
-from repro.federated.simulation import FLConfig, run_simulation
+from repro.federated.simulation import (FLConfig, run_simulation,
+                                        run_simulation_reference)
 from repro.data.synthetic import SyntheticCifar, SyntheticLM
 from repro.optim import sgd
 
@@ -112,6 +115,114 @@ def test_fl_simulation_converges_and_meters_energy():
     hi = res.rounds * 8 * ep.e_participant_j / 3600.0
     assert lo <= res.energy_wh <= hi
     assert 0.3 < res.participation_rate < 0.9
+
+
+def test_campaign_engine_matches_reference():
+    """Scan-fused campaign == seed Python-loop oracle on the same scenario:
+    convergence round, energy ledger, and accuracy trajectory."""
+    data, init_params, loss_fn, eval_fn, client_data = _mlp_setup()
+    fl = FLConfig(n_clients=8, local_steps=2, batch_per_client=16,
+                  max_rounds=25, target_acc=0.73, seed=5)
+    args = (fl, init_params, loss_fn, eval_fn, client_data,
+            data.val_set(256), sgd(0.05))
+    ref = run_simulation_reference(*args, p=0.5)
+    eng = run_simulation(*args, p=0.5)
+    assert eng.rounds == ref.rounds
+    assert eng.converged == ref.converged
+    # masks are drawn from the same RNG stream -> realized energy and
+    # participation are bitwise-identical
+    assert eng.energy_wh == ref.energy_wh
+    assert eng.participation_rate == ref.participation_rate
+    assert eng.ledger_summary["rounds"] == ref.ledger_summary["rounds"]
+    np.testing.assert_allclose(eng.acc_history, ref.acc_history,
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_campaign_batched_sweep_consistency():
+    """One vmapped program over a p-grid: per-scenario accounting invariants
+    + post-convergence rounds are no-ops."""
+    data, init_params, loss_fn, eval_fn, client_data = _mlp_setup()
+    fl = FLConfig(n_clients=8, local_steps=2, batch_per_client=16,
+                  max_rounds=20, target_acc=0.73, seed=0)
+    ps = jnp.asarray([0.25, 0.5, 0.85], jnp.float32)
+    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data,
+                        data.val_set(256), sgd(0.05), ps)
+    assert res.batch == 3
+    rounds = np.asarray(res.rounds)
+    assert np.all(rounds >= 1) and np.all(rounds <= fl.max_rounds)
+    # the ledger stops exactly at convergence
+    np.testing.assert_array_equal(np.asarray(res.ledger.rounds), rounds)
+    # k_history agrees with the ledger's participation counts
+    np.testing.assert_array_equal(
+        np.asarray(res.k_history).sum(axis=1),
+        np.asarray(res.ledger.participation_counts).sum(axis=1))
+    # post-convergence accuracy entries repeat the last converged value
+    for i in range(3):
+        tail = np.asarray(res.acc_history[i])[rounds[i] - 1:]
+        np.testing.assert_allclose(tail, tail[0])
+        k_tail = np.asarray(res.k_history[i])[rounds[i]:]
+        assert np.all(k_tail == 0)
+    # realized participation tracks p within 4 binomial sigmas of the
+    # realized draw count (few rounds -> wide band)
+    p_np = np.asarray(ps, np.float64)
+    draws = rounds * fl.n_clients
+    sigma = np.sqrt(p_np * (1 - p_np) / draws)
+    err = np.abs(np.asarray(res.participation_rate) - p_np)
+    assert np.all(err <= 4 * sigma + 1e-9), (err, 4 * sigma)
+
+
+def test_campaign_reports_realized_aoi():
+    """In-loop AoI tracker: realized mean age tracks the renewal formula
+    E[delta] = 1/p - 1/2 and decreases with participation."""
+    data, init_params, loss_fn, eval_fn, client_data = _mlp_setup()
+    # target > 1 never converges -> every round contributes AoI samples
+    fl = FLConfig(n_clients=8, local_steps=1, batch_per_client=8,
+                  max_rounds=60, target_acc=1.01, seed=2)
+    ps = jnp.asarray([0.3, 0.8], jnp.float32)
+    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data,
+                        data.val_set(64), sgd(0.05), ps)
+    aoi = np.asarray(res.mean_aoi)
+    want = np.asarray(expected_aoi(ps))
+    assert aoi[0] > aoi[1]
+    np.testing.assert_allclose(aoi, want, rtol=0.35)
+    assert np.all(np.asarray(res.per_node_aoi) >= 0.5 - 1e-12)
+    # the batched tracker's properties agree with the result fields
+    np.testing.assert_array_equal(np.asarray(res.aoi.per_node_aoi),
+                                  np.asarray(res.per_node_aoi))
+    np.testing.assert_array_equal(np.asarray(res.aoi.mean_aoi), aoi)
+
+
+def test_controller_solve_batched_matches_scalar():
+    """The batched grid path returns the scalar participation_probability
+    per scenario, without Python-level per-scenario solves."""
+    costs = [1.0, 3.0, 6.0]
+    ctrl = ParticipationController(n_nodes=50, gamma=0.0, cost=1.0)
+    for mode in ("ne", "ne_worst", "centralized"):
+        batched = np.asarray(ctrl.solve_batched(0.0, jnp.asarray(costs),
+                                                mode=mode))
+        for j, c in enumerate(costs):
+            scalar = ParticipationController(
+                n_nodes=50, gamma=0.0, cost=c,
+                mode=mode).participation_probability()
+            np.testing.assert_allclose(batched[j], scalar, atol=2e-3)
+    fixed = np.asarray(ctrl.solve_batched(0.0, jnp.asarray(costs),
+                                          mode="fixed"))
+    np.testing.assert_allclose(fixed, ctrl.fixed_p)
+
+
+def test_controller_solve_batched_mechanism_grid():
+    """Mechanism mode: γ-grid calibration lifts every scenario's induced
+    worst NE above the selfish one (grid-resolution agreement with the
+    bisection-refined scalar path)."""
+    costs = jnp.asarray([2.0, 5.0])
+    ctrl = ParticipationController(n_nodes=50, gamma=0.0, cost=2.0)
+    p_mech = np.asarray(ctrl.solve_batched(0.0, costs, mode="mechanism"))
+    p_selfish = np.asarray(ctrl.solve_batched(0.0, costs, mode="ne_worst"))
+    assert np.all(p_mech > p_selfish)
+    scalar = ParticipationController(
+        n_nodes=50, gamma=0.0, cost=5.0,
+        mode="mechanism").participation_probability()
+    np.testing.assert_allclose(p_mech[1], scalar, atol=0.05)
 
 
 def test_fl_more_participation_not_slower():

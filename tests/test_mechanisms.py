@@ -250,3 +250,54 @@ def test_controller_explicit_mechanism(dur):
         mechanism=AoIRewardMechanism(gamma_star=0.6))
     p = ctrl.participation_probability()
     assert 0.4 < p <= 1.0  # paper Fig. 4: γ=0.6 keeps participation high
+
+
+def _report_without_induced_ne(n=N):
+    """A MechanismReport for the 'no induced NE' branch (ne_p = NaN) —
+    what evaluate_mechanism returns when the induced game has no
+    equilibrium."""
+    from repro.mechanisms.base import MechanismReport
+    base = UtilityParams(gamma=0.0, cost=5.0, n_nodes=n)
+    return MechanismReport(
+        mechanism="aoi_reward", base_params=base, induced_params=base,
+        equilibria=[], ne_costs=[], ne_p=float("nan"),
+        ne_cost=float("nan"), opt_p=0.6, opt_cost=40.0, poa=float("inf"),
+        transfer_per_node=0.0, planner_budget=0.0, ir_slack=float("-inf"),
+        individually_rational=False)
+
+
+def test_controller_mechanism_nan_no_induced_ne_path():
+    """ne_p = NaN must not propagate: the controller falls back to p = 0
+    (nobody participates) and diagnostics flag the missed target."""
+    ctrl = ParticipationController(n_nodes=N, gamma=0.0, cost=5.0,
+                                   mode="mechanism",
+                                   _mech_report=_report_without_induced_ne())
+    p = ctrl.participation_probability()
+    assert p == 0.0 and not np.isnan(p)
+    d = ctrl.diagnostics()
+    assert d["mechanism_target_met"] is False
+    assert d["p"] == 0.0
+    assert np.isinf(d["mechanism_poa"])
+    assert not d["individually_rational"]
+
+
+def test_controller_mechanism_target_met_reporting(dur):
+    """The happy path must report mechanism_target_met = True — and the
+    flag must track poa <= target_poa exactly."""
+    ctrl = ParticipationController(n_nodes=N, gamma=0.0, cost=5.0,
+                                   mode="mechanism", target_poa=1.05)
+    d = ctrl.diagnostics()
+    assert d["mechanism_target_met"] is (d["mechanism_poa"]
+                                         <= ctrl.target_poa + 1e-9)
+    assert d["mechanism_target_met"] is True
+
+
+def test_controller_solve_batched_honours_explicit_mechanism(dur):
+    """solve_batched(mode="mechanism") must use a supplied mechanism's
+    transfer (scalar-path parity), not re-calibrate its own γ."""
+    ctrl = ParticipationController(
+        n_nodes=N, gamma=0.0, cost=2.0, mode="mechanism",
+        mechanism=AoIRewardMechanism(gamma_star=0.6))
+    p_scalar = ctrl.participation_probability()
+    p_batched = float(ctrl.solve_batched(0.0, 2.0)[0])
+    assert p_batched == pytest.approx(p_scalar, abs=2e-3)

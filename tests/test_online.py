@@ -65,3 +65,34 @@ def test_estimator_feeds_controller():
     p = ctrl.participation_probability()
     assert 0.0 < p <= 1.0
     assert np.isfinite(ctrl.diagnostics()["poa"])
+
+def test_observe_batch_equals_sequential():
+    """RLS normal equations are additive: one observe_batch == N observes."""
+    seq = OnlineDurationEstimator(n_nodes=20, saturation=6.0)
+    bat = OnlineDurationEstimator(n_nodes=20, saturation=6.0)
+    rng = np.random.default_rng(7)
+    ks = rng.integers(1, 21, size=60)
+    gs = _true_rate(ks) * rng.lognormal(0.0, 0.2, size=60)
+    for k, g in zip(ks, gs):
+        seq.observe(int(k), float(g))
+    bat.observe_batch(ks, gs)
+    assert bat.n_obs == seq.n_obs == 60
+    np.testing.assert_allclose(bat.progress_rate(np.array([2, 8, 15])),
+                               seq.progress_rate(np.array([2, 8, 15])),
+                               rtol=1e-12)
+
+
+def test_ingest_trajectory_learns_from_campaign_histories():
+    """Feeding (k, acc) round histories moves the duration model the right
+    way: campaigns where more participants yield faster accuracy gains
+    produce a decreasing d(k)."""
+    est = OnlineDurationEstimator(n_nodes=20, saturation=6.0)
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        ks = rng.integers(1, 21, size=25)
+        gains = _true_rate(ks) * 0.43  # acc gain per round, target gap 0.43
+        accs = 0.3 + np.concatenate([[0.0], np.cumsum(gains[1:])])
+        est.ingest_trajectory(ks, accs, target_acc=0.73)
+    dm = est.duration_model()
+    tab = np.asarray(dm.table())
+    assert tab[2] > tab[20]  # more participants -> fewer rounds

@@ -1,0 +1,82 @@
+"""Hypothesis property tests for the AoI layer (core/aoi.py).
+
+The renewal formula E[delta] = 1/p - 1/2 (paper eq. 10) is checked against
+the Monte-Carlo sample-path oracle ``simulate_aoi`` across the whole
+participation range, and the p -> 0 clip boundary is pinned down:
+``expected_aoi`` must stay finite, positive, and antitone in p everywhere
+in [0, 1] — the properties the utility's -γ·log(AoI) term and the campaign
+engine's realized-AoI reporting rely on.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401
+from repro.core.aoi import AoITracker, expected_aoi, log_aoi, simulate_aoi
+
+CLIP = 1e-9  # expected_aoi's p -> 0 clip
+
+
+# One jitted oracle (p traced, length static) so hypothesis examples don't
+# each pay a fresh scan compile.
+_sim = jax.jit(functools.partial(simulate_aoi, n_rounds=120_000))
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.floats(0.08, 0.95), seed=st.integers(0, 2**31 - 1))
+def test_renewal_formula_matches_monte_carlo(p, seed):
+    sim = float(_sim(p, key=jax.random.PRNGKey(seed)))
+    want = float(expected_aoi(jnp.asarray(p)))
+    # MC error grows as p -> 0 (longer renewal cycles); 120k rounds keeps
+    # the sample mean within a few percent across the strategy's range.
+    assert sim == pytest.approx(want, rel=0.08)
+
+
+@given(p1=st.floats(0.0, 1.0), p2=st.floats(0.0, 1.0))
+def test_expected_aoi_antitone(p1, p2):
+    lo, hi = sorted([p1, p2])
+    a_lo = float(expected_aoi(jnp.asarray(lo)))
+    a_hi = float(expected_aoi(jnp.asarray(hi)))
+    assert a_lo >= a_hi  # more participation -> fresher information
+
+
+@given(p=st.floats(0.0, 1.0, allow_subnormal=False))
+def test_expected_aoi_finite_positive_everywhere(p):
+    """The clip at p -> 0 keeps both the AoI and its log finite."""
+    a = float(expected_aoi(jnp.asarray(p)))
+    la = float(log_aoi(jnp.asarray(p)))
+    assert np.isfinite(a) and np.isfinite(la)
+    assert a >= 0.5  # attained at p = 1
+    assert a <= 1.0 / CLIP  # the clip ceiling
+
+
+def test_expected_aoi_clip_boundary_exact():
+    """Below the clip every p collapses to the p = CLIP ceiling."""
+    ceiling = float(expected_aoi(jnp.asarray(CLIP)))
+    for p in (0.0, 1e-12, CLIP):
+        assert float(expected_aoi(jnp.asarray(p))) == pytest.approx(ceiling)
+    # just above the clip the formula is live again and strictly below
+    assert float(expected_aoi(jnp.asarray(1e-6))) < ceiling
+
+
+@given(seed=st.integers(0, 2**31 - 1), p=st.floats(0.2, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_tracker_agrees_with_simulate_oracle(seed, p):
+    """AoITracker (the scan-carry pytree) and simulate_aoi implement the
+    same sampling convention: identical mean over identical draws."""
+    rounds = 400
+    key = jax.random.PRNGKey(seed)
+    draws = jax.random.bernoulli(key, p, (rounds,))
+
+    tr = AoITracker.create(1)
+    for joined in np.asarray(draws):
+        tr = tr.update(jnp.asarray([joined]))
+    want = float(simulate_aoi(p, rounds, key))
+    got = float(tr.cum_age[0] / tr.rounds)
+    assert got == pytest.approx(want, rel=1e-12)
