@@ -33,46 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core  # noqa: F401  (enables x64)
-from repro.data.synthetic import SyntheticCifar
 from repro.federated.campaign import build_campaign, run_campaigns
 from repro.federated.simulation import FLConfig, run_simulation_reference
+from repro.federated.tasks import synthetic_mlp_task
 from repro.optim import sgd
 from benchmarks.common import header, record
-
-HIDDEN = 16
-
-
-def make_task(image_shape=(8, 8, 3), noise=3.0):
-    """A small learnable classification task (CIFAR stand-in, shrunk so the
-    sweep measures engine overhead, not matmul throughput)."""
-    data = SyntheticCifar(noise=noise, image_shape=image_shape)
-    d = int(np.prod(image_shape))
-
-    def init_params(key):
-        k1, k2 = jax.random.split(key)
-        return {"w1": jax.random.normal(k1, (d, HIDDEN)) * d ** -0.5,
-                "b1": jnp.zeros(HIDDEN),
-                "w2": jax.random.normal(k2, (HIDDEN, 10)) * HIDDEN ** -0.5,
-                "b2": jnp.zeros(10)}
-
-    def fwd(p, x):
-        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
-        return h @ p["w2"] + p["b2"]
-
-    def loss_fn(p, b):
-        lp = jax.nn.log_softmax(fwd(p, b["images"]))
-        return -jnp.mean(jnp.take_along_axis(lp, b["labels"][:, None], 1))
-
-    def eval_fn(p, b):
-        return jnp.mean(jnp.argmax(fwd(p, b["images"]), -1) == b["labels"])
-
-    def client_data(cid, rnd, n, steps):
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(0), cid), rnd)
-        return jax.vmap(lambda k: data.batch(k, n))(
-            jax.random.split(key, steps))
-
-    return data, init_params, loss_fn, eval_fn, client_data
 
 
 def main() -> None:
@@ -85,25 +50,21 @@ def main() -> None:
     ap.add_argument("--json", default="BENCH_campaign.json")
     args = ap.parse_args()
 
-    data, init_params, loss_fn, eval_fn, client_data = make_task()
+    task = synthetic_mlp_task()
     fl = FLConfig(n_clients=10, local_steps=1, batch_per_client=8,
                   max_rounds=50, target_acc=0.73, seed=1)
-    val = data.val_set(128)
     opt = sgd(0.15)
     ps = jnp.asarray(np.linspace(0.1, 0.9, args.scenarios), jnp.float32)
     header()
 
     # -- scan-fused: compile once, then one warm timed sweep -----------------
-    engine = build_campaign(fl, init_params, loss_fn, eval_fn, client_data,
-                            val, opt)
+    engine = build_campaign(fl, *task.campaign_args(), opt)
     t0 = time.perf_counter()
-    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data, val,
-                        opt, ps, engine=engine)
+    res = run_campaigns(fl, *task.campaign_args(), opt, ps, engine=engine)
     jax.block_until_ready(res.energy_wh)
     t_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    res = run_campaigns(fl, init_params, loss_fn, eval_fn, client_data, val,
-                        opt, ps, engine=engine)
+    res = run_campaigns(fl, *task.campaign_args(), opt, ps, engine=engine)
     jax.block_until_ready(res.energy_wh)
     t_fused = time.perf_counter() - t0
     n_conv = int(jnp.sum(res.converged))
@@ -120,8 +81,8 @@ def main() -> None:
     t0 = time.perf_counter()
     ref_rounds = {}
     for i in idx:
-        r = run_simulation_reference(fl, init_params, loss_fn, eval_fn,
-                                     client_data, val, opt, p=float(ps[i]))
+        r = run_simulation_reference(fl, *task.campaign_args(), opt,
+                                     p=float(ps[i]))
         ref_rounds[int(i)] = r.rounds
     t_ref_sample = time.perf_counter() - t0
     t_ref = t_ref_sample * (args.scenarios / len(idx))

@@ -1,0 +1,193 @@
+"""Stratified-fleet campaign sweep: heterogeneous engine vs per-node loop.
+
+The heterogeneous campaign engine replays ``(B, N)`` per-node equilibrium
+profiles — here the certified (often spontaneously *stratified*) NEs of an
+identical-node fleet across a cost sweep — through full FedAvg campaigns
+with per-node energy rates and fleet churn, as one jitted scan+vmap
+program. The oracle is :func:`run_heterogeneous_reference`, the per-node
+Python round loop the engine is bitwise-regression-tested against
+(``tests/test_hetero_campaign.py``); a ``--sample`` subset of it is timed
+and extrapolated (pass ``--full-reference`` to loop every scenario).
+
+Emits ``name,us_per_call,derived`` CSV rows, a ``speedup`` row (acceptance
+bar: >= 50x), and ``BENCH_hetero_campaign.json`` with per-node energy/AoI
+splits (worker vs free-rider strata) for the perf trajectory.
+
+Run:  PYTHONPATH=src:. python benchmarks/heterogeneous_campaign.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.controller import ParticipationController
+from repro.core.duration import theoretical_duration
+from repro.core.energy import EnergyParams, per_node_energy_rates
+from repro.federated.campaign import ChurnConfig, build_campaign, run_campaigns
+from repro.federated.simulation import (FLConfig,
+                                        run_heterogeneous_reference)
+from repro.federated.tasks import synthetic_mlp_task
+from repro.optim import sgd
+from benchmarks.common import header, record
+
+N_NODES = 10
+GAMMA = 0.2
+
+
+def solve_fleet_profiles(scenarios: int) -> tuple[np.ndarray, jnp.ndarray]:
+    """Certified asymmetric NEs of identical fleets across a cost sweep.
+
+    Costs span the stable->stratified transition, so the sweep mixes
+    symmetric and spontaneously stratified equilibria — the scenario
+    diversity the symmetric engine could not replay.
+    """
+    ctrl = ParticipationController(
+        n_nodes=N_NODES, gamma=GAMMA, cost=6.0,
+        duration_model=theoretical_duration(N_NODES))
+    cost_grid = np.linspace(2.0, 9.0, scenarios)
+    costs = jnp.asarray(cost_grid)[:, None] * jnp.ones((1, N_NODES))
+    gammas = jnp.full((scenarios, N_NODES), GAMMA)
+    return cost_grid, ctrl.solve_batched(gammas, costs, mode="ne",
+                                         damping=0.6, max_iters=300)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=32)
+    ap.add_argument("--sample", type=int, default=3,
+                    help="reference scenarios to time (extrapolated to all)")
+    ap.add_argument("--full-reference", action="store_true",
+                    help="loop the reference simulator over every scenario")
+    ap.add_argument("--json", default="BENCH_hetero_campaign.json")
+    args = ap.parse_args()
+
+    task = synthetic_mlp_task()
+    fl = FLConfig(n_clients=N_NODES, local_steps=1, batch_per_client=8,
+                  max_rounds=50, target_acc=0.73, seed=1)
+    opt = sgd(0.15)
+
+    # -- scenario batch: per-node p, two hardware tiers, mild churn ----------
+    t0 = time.perf_counter()
+    cost_grid, p_matrix = solve_fleet_profiles(args.scenarios)
+    jax.block_until_ready(p_matrix)
+    t_game = time.perf_counter() - t0
+    spread = np.asarray(jnp.max(p_matrix, 1) - jnp.min(p_matrix, 1))
+    n_strat = int((spread > 0.3).sum())
+    record("hetero_campaign.game_solves", t_game * 1e6,
+           f"{args.scenarios} fleets solved+certified; "
+           f"{n_strat} stratified")
+
+    # battery sensors (nodes 0..4, lighter hw) vs mains gateways (5..9)
+    tiers = [EnergyParams(p_hw_w=150.0, t_train_s=6.0) if i < N_NODES // 2
+             else EnergyParams() for i in range(N_NODES)]
+    e_part, e_idle = per_node_energy_rates(tiers)
+    rates = (e_part[None, :], e_idle[None, :])
+    churn = ChurnConfig(arrival=0.5, departure=0.02)
+
+    # -- scan-fused: compile once, then one warm timed sweep -----------------
+    engine = build_campaign(fl, *task.campaign_args(), opt, churn=True)
+
+    def sweep():
+        return run_campaigns(fl, *task.campaign_args(), opt, p_matrix,
+                             energy_rates_j=rates, churn=churn,
+                             engine=engine)
+
+    t0 = time.perf_counter()
+    res = sweep()
+    jax.block_until_ready(res.energy_wh)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = sweep()
+    jax.block_until_ready(res.energy_wh)
+    t_fused = time.perf_counter() - t0
+    n_conv = int(jnp.sum(res.converged))
+    record("hetero_campaign.fused_total", t_fused * 1e6,
+           f"{args.scenarios} per-node campaigns x {fl.max_rounds} rounds; "
+           f"{n_conv} converged; compile {t_cold:.1f}s")
+
+    # -- per-node reference loop ---------------------------------------------
+    if args.full_reference:
+        idx = np.arange(args.scenarios)
+    else:
+        idx = np.linspace(0, args.scenarios - 1,
+                          min(args.sample, args.scenarios)).astype(int)
+    t0 = time.perf_counter()
+    ref = {}
+    for i in idx:
+        ref[int(i)] = run_heterogeneous_reference(
+            fl, *task.campaign_args(), opt, p_matrix[i],
+            energy_rates_j=(e_part, e_idle), churn=churn)
+    t_ref_sample = time.perf_counter() - t0
+    t_ref = t_ref_sample * (args.scenarios / len(idx))
+    tag = ("measured" if args.full_reference
+           else f"extrapolated from {len(idx)}")
+    record("hetero_campaign.reference_total", t_ref * 1e6,
+           f"{args.scenarios} campaigns ({tag})")
+
+    # sanity: the engine IS the oracle wherever the reference actually ran
+    for i, r in ref.items():
+        assert int(res.rounds[i]) == r.rounds, (i, int(res.rounds[i]), r.rounds)
+        np.testing.assert_array_equal(np.asarray(res.ledger.per_node_j[i]),
+                                      np.asarray(r.ledger.per_node_j))
+
+    speedup = t_ref / t_fused
+    record("hetero_campaign.speedup", speedup,
+           f"target >= 50x; fused {t_fused:.2f}s vs reference {t_ref:.1f}s")
+
+    # -- per-node splits ------------------------------------------------------
+    p_np = np.asarray(p_matrix)
+    e_np = np.asarray(res.per_node_energy_wh)
+    a_np = np.asarray(res.per_node_aoi)
+    workers = p_np > 0.5
+    split = []
+    for i in range(args.scenarios):
+        w = workers[i]
+        split.append({
+            "cost": round(float(cost_grid[i]), 3),
+            "p_spread": round(float(spread[i]), 3),
+            "workers": int(w.sum()),
+            "rounds": int(res.rounds[i]),
+            "energy_wh": round(float(res.energy_wh[i]), 2),
+            "worker_energy_wh": round(float(e_np[i][w].mean()), 3)
+            if w.any() else None,
+            "freerider_energy_wh": round(float(e_np[i][~w].mean()), 3)
+            if (~w).any() else None,
+            "worker_aoi": round(float(a_np[i][w].mean()), 3)
+            if w.any() else None,
+            "freerider_aoi": round(float(a_np[i][~w].mean()), 3)
+            if (~w).any() else None,
+        })
+
+    payload = {
+        "scenarios": args.scenarios,
+        "n_clients": N_NODES,
+        "max_rounds": fl.max_rounds,
+        "stratified_scenarios": n_strat,
+        "converged": n_conv,
+        "game_solve_s": round(t_game, 2),
+        "fused_s": round(t_fused, 4),
+        "fused_compile_s": round(t_cold, 2),
+        "reference_s": round(t_ref, 2),
+        "reference_timing": tag,
+        "speedup": round(speedup, 1),
+        "per_node_energy_wh": np.round(e_np, 4).tolist(),
+        "per_node_aoi": np.round(a_np, 4).tolist(),
+        "present_counts": np.asarray(res.present_counts).tolist(),
+        "strata": split,
+    }
+    pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\nfused sweep: {t_fused:.2f}s for {args.scenarios} per-node "
+          f"campaigns ({t_fused / args.scenarios * 1e3:.1f} ms/campaign)")
+    print(f"reference:   {t_ref:.1f}s ({tag})")
+    print(f"speedup: {speedup:.1f}x  -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.partition import (dirichlet_partition, iid_partition,
+                                  sharded_client_data)
 from repro.data.synthetic import SyntheticCifar
 from repro.federated.campaign import run_campaigns
 from repro.federated.simulation import FLConfig
@@ -32,17 +33,10 @@ def build_task(alpha: float | None):
         parts = iid_partition(N_SAMPLES, N_CLIENTS, seed=0)
     else:
         parts = dirichlet_partition(labels_np, N_CLIENTS, alpha=alpha, seed=0)
-    # pad shards to equal length so the sim can vmap (wrap-around sampling)
-    maxlen = max(len(p) for p in parts)
-    shards = np.stack([np.resize(p, maxlen) for p in parts])
-    images = jnp.asarray(np.asarray(full["images"])[shards])
-    labels = jnp.asarray(labels_np[shards])
-
-    def client_data(cid, rnd, n, steps):
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(1), cid), rnd)
-        idx = jax.random.randint(key, (steps, n), 0, maxlen)
-        return {"images": images[cid][idx], "labels": labels[cid][idx]}
+    # per-node shard API: pads shards and binds the per-(client, round)
+    # minibatch sampler — no hand-rolled masking
+    client_data = sharded_client_data(full["images"], labels_np, parts,
+                                      seed=1)
 
     def init_params(key):
         k1, k2 = jax.random.split(key)

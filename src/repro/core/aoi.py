@@ -63,15 +63,23 @@ class AoITracker:
     tracker is a registered pytree, so it can be a ``lax.scan`` carry leaf
     inside jitted campaign loops.
 
+    Node churn (heterogeneous campaigns): :meth:`update` takes an optional
+    ``present`` mask — absent nodes are *frozen* (age and cumulative age
+    untouched, their round not counted in ``tracked``), so a node that
+    departs and later re-arrives resumes the age it left with.
+
     Attributes:
         age: ``(N,)`` rounds since each node's last participation.
-        cum_age: ``(N,)`` sum of mid-round sampled ages.
-        rounds: number of rounds tracked.
+        cum_age: ``(N,)`` sum of mid-round sampled ages (unitless rounds).
+        rounds: scalar — total rounds this tracker has seen.
+        tracked: ``(N,)`` rounds each node was present for (== ``rounds``
+            for every node when no churn mask was ever passed).
     """
 
     age: jax.Array
     cum_age: jax.Array
     rounds: jax.Array
+    tracked: jax.Array
 
     @staticmethod
     def create(n_nodes: int) -> "AoITracker":
@@ -79,22 +87,44 @@ class AoITracker:
             age=jnp.zeros((n_nodes,), jnp.float64),
             cum_age=jnp.zeros((n_nodes,), jnp.float64),
             rounds=jnp.zeros((), jnp.int64),
+            tracked=jnp.zeros((n_nodes,), jnp.int64),
         )
 
-    def update(self, mask: jax.Array) -> "AoITracker":
-        """Record one round: sample ages mid-round, reset participants."""
+    def update(self, mask: jax.Array,
+               present: jax.Array | None = None) -> "AoITracker":
+        """Record one round: sample ages mid-round, reset participants.
+
+        Args:
+            mask: ``(N,)`` bool/0-1 — who participated this round.
+            present: optional ``(N,)`` bool — who was in the fleet this
+                round. Absent nodes are frozen (age/cum_age/tracked
+                untouched); ``None`` means everyone is present.
+        """
         joined = jnp.asarray(mask, bool)
+        new_age = jnp.where(joined, 0.0, self.age + 1.0)
+        new_cum = self.cum_age + self.age + 0.5
+        if present is None:
+            return AoITracker(
+                age=new_age,
+                cum_age=new_cum,
+                rounds=self.rounds + 1,
+                tracked=self.tracked + 1,
+            )
+        here = jnp.asarray(present, bool)
         return AoITracker(
-            age=jnp.where(joined, 0.0, self.age + 1.0),
-            cum_age=self.cum_age + self.age + 0.5,
+            age=jnp.where(here, new_age, self.age),
+            cum_age=jnp.where(here, new_cum, self.cum_age),
             rounds=self.rounds + 1,
+            tracked=self.tracked + jnp.asarray(here, self.tracked.dtype),
         )
 
     @property
     def per_node_aoi(self) -> jax.Array:
         """``(N,)`` empirical mean age per node (``(B, N)`` when the tracker
-        carries a leading batch axis, e.g. out of a vmapped campaign)."""
-        return self.cum_age / jnp.maximum(self.rounds, 1)[..., None]
+        carries a leading batch axis, e.g. out of a vmapped campaign).
+        Normalized by each node's *tracked* rounds, so churned nodes report
+        the mean age over the rounds they were actually in the fleet."""
+        return self.cum_age / jnp.maximum(self.tracked, 1)
 
     @property
     def mean_aoi(self) -> jax.Array:

@@ -8,8 +8,19 @@ Bridges the game-theory layer to the FL runtime:
 * solves the game for the configured (gamma, c) and hands the runtime either
   the NE probability (distributed mode), the centralized optimum
   (centralized mode), or a fixed user probability;
+* resolves whole scenario *batches* with zero Python-level solves:
+  :meth:`ParticipationController.solve_batched` returns ``(B,)``
+  probabilities for symmetric (γ, c) grids and — given ``(B, N)`` per-node
+  cost/γ matrices — ``(B, N)`` certified asymmetric-NE / planner /
+  uniform-γ* profiles ready for the scan-fused campaign engine
+  (:mod:`repro.federated.campaign`);
 * meters realized energy per round through :class:`EnergyLedger` and exposes
   convergence/PoA diagnostics.
+
+Shape conventions: scalars configure one game; ``(B,)`` arrays batch
+symmetric scenarios; ``(B, N)`` matrices batch heterogeneous fleets
+(``N == n_nodes``). Energies are Joules per round inside the game layer and
+Watt-hours in reported summaries.
 """
 from __future__ import annotations
 
@@ -109,6 +120,7 @@ class ParticipationController:
                              n_nodes=self.n_nodes)
 
     def solve(self) -> GameSolution:
+        """Solve (and cache) the symmetric game at this (γ, c)."""
         if self._solution is None:
             self._solution = solve_game(self.utility_params,
                                         self.duration_model)
@@ -136,20 +148,33 @@ class ParticipationController:
         mode: str | None = None,
         *,
         gamma_max: float = 5.0,
-        coarse: int = 64,
+        coarse: int | None = None,
+        **solver_kwargs,
     ) -> jax.Array:
         """Participation probabilities for a whole (γ, c) scenario grid.
 
         The batched counterpart of :meth:`participation_probability`: all
-        scenarios are resolved through the batched game solver
-        (:func:`repro.mechanisms.batched.solve_batched`) with no
+        scenarios are resolved through the batched game solvers with no
         Python-level per-scenario solves — the path the campaign engine
-        (:mod:`repro.federated.campaign`) feeds on for Table II-style
-        sweeps.
+        (:mod:`repro.federated.campaign`) feeds on for Table II-style and
+        stratified-fleet sweeps.
+
+        Two regimes, dispatched on input rank:
+
+        * **symmetric** — ``gammas`` / ``costs`` are scalars or ``(B,)``
+          arrays (one identical-node game per scenario); resolved through
+          :func:`repro.mechanisms.batched.solve_batched`; returns ``(B,)``.
+        * **heterogeneous** — either input is a ``(B, N)`` *matrix* of
+          per-node values (``N == n_nodes``); resolved through
+          :mod:`repro.core.asymmetric_batched` (certified asymmetric NEs,
+          heterogeneity-aware planner, uniform-γ* mechanism); returns a
+          ``(B, N)`` probability matrix ready to feed
+          :func:`repro.federated.campaign.run_campaigns`. See
+          :meth:`solve_batched_heterogeneous` for the knobs.
 
         Args:
-            gammas / costs: scalars or broadcast-compatible ``(B,)`` arrays
-                (default: this controller's own γ / c).
+            gammas / costs: scalars, ``(B,)`` arrays, or ``(B, N)``
+                matrices (default: this controller's own γ / c).
             mode: overrides ``self.mode``. Semantics per scenario match the
                 scalar path — ``"ne"`` best-cost NE, ``"ne_worst"``
                 worst-cost NE, ``"centralized"`` planner optimum,
@@ -158,13 +183,29 @@ class ParticipationController:
                 resolution ``gamma_max / (coarse - 1)``; the scalar path
                 refines by bisection, so mechanism probabilities agree only
                 to that resolution). Scenarios with no NE resolve to 0.0.
+            coarse: mechanism-mode γ-grid size (default 64 symmetric, 16
+                heterogeneous — the asymmetric solves cost more).
+            solver_kwargs: heterogeneous path only — forwarded to the
+                asymmetric engine (``damping``, ``max_iters``, ``tol``, …).
 
         Returns:
-            ``(B,)`` probabilities.
+            ``(B,)`` probabilities, or ``(B, N)`` in the heterogeneous
+            regime.
         """
         # Lazy import — repro.mechanisms imports repro.core at load time.
         from repro.mechanisms.batched import solve_batched
 
+        if ((gammas is not None and jnp.asarray(gammas).ndim == 2)
+                or (costs is not None and jnp.asarray(costs).ndim == 2)):
+            if coarse is not None:
+                solver_kwargs["coarse"] = coarse
+            return self.solve_batched_heterogeneous(
+                gammas, costs, mode, gamma_max=gamma_max, **solver_kwargs)
+        if solver_kwargs:
+            raise TypeError(
+                f"solver_kwargs {sorted(solver_kwargs)} only apply to the "
+                "heterogeneous path (pass (B, N) gammas/costs)")
+        coarse = 64 if coarse is None else coarse
         mode = mode or self.mode
         g = jnp.atleast_1d(jnp.asarray(
             self.gamma if gammas is None else gammas, jnp.float64))
@@ -208,7 +249,124 @@ class ParticipationController:
         p = sol.worst_ne if mode == "ne_worst" else sol.best_ne
         return jnp.nan_to_num(p, nan=0.0)
 
+    def solve_batched_heterogeneous(
+        self,
+        gammas: jax.Array | float | None = None,
+        costs: jax.Array | float | None = None,
+        mode: str | None = None,
+        *,
+        gamma_max: float = 5.0,
+        coarse: int = 16,
+        cert_tol: float = 1e-3,
+        **solver_kwargs,
+    ) -> jax.Array:
+        """Per-node participation matrices for heterogeneous scenario sweeps.
+
+        Resolves a batch of *asymmetric* games — per-node cost/γ vectors —
+        straight into the ``(B, N)`` probability matrices the campaign
+        engine replays, with every scenario solved inside the batched
+        asymmetric engine (:mod:`repro.core.asymmetric_batched`):
+
+        * ``"ne"`` / ``"ne_worst"`` — damped Gauss-Seidel from three
+          starting profiles (0.5, ``P_MIN``, 1.0) to reach distinct
+          equilibria (identical fleets can stratify — see PR 2's
+          spontaneous-stratification finding), every candidate certified by
+          the jitted deviation grid; per scenario the certified NE with the
+          lowest / highest social cost wins (fallback: the default-start
+          fixed point when nothing certifies within ``cert_tol``).
+        * ``"centralized"`` — the heterogeneity-aware planner
+          (:func:`~repro.core.asymmetric_batched.planner_batched`),
+          descending from the default-start NE.
+        * ``"mechanism"`` — the smallest *uniform* AoI-reward weight γ* on
+          a ``coarse``-point grid in ``[0, gamma_max]`` whose induced
+          asymmetric NE has heterogeneous PoA ≤ ``target_poa`` (grid
+          counterpart of
+          :func:`repro.mechanisms.heterogeneous.calibrate_gamma_heterogeneous`,
+          which refines by bisection); returns that induced NE profile.
+        * ``"fixed"`` — ``fixed_p`` everywhere.
+
+        Args:
+            gammas / costs: per-node matrices, broadcastable to ``(B, N)``
+                with ``N == n_nodes`` (scalars/vectors default to this
+                controller's γ / c spread uniformly).
+            cert_tol: max profitable unilateral deviation for a fixed point
+                to count as a certified NE in the multistart selection.
+            solver_kwargs: forwarded to the asymmetric engine (``damping``,
+                ``max_iters``, ``tol``).
+
+        Returns:
+            ``(B, N)`` per-node probabilities.
+        """
+        from repro.core.asymmetric_batched import (
+            P_MIN, planner_batched, poa_report, social_cost_batched,
+            solve_heterogeneous, verify_equilibrium_batched)
+
+        mode = mode or self.mode
+        n = self.n_nodes
+        g = jnp.atleast_2d(jnp.asarray(
+            self.gamma if gammas is None else gammas, jnp.float64))
+        c = jnp.atleast_2d(jnp.asarray(
+            self.cost if costs is None else costs, jnp.float64))
+        g, c = jnp.broadcast_arrays(g, c)
+        if g.shape[-1] != n:
+            raise ValueError(f"per-node arrays have N={g.shape[-1]}, "
+                             f"controller has n_nodes={n}")
+        b = g.shape[0]
+        dur = self.duration_model
+
+        if mode == "fixed":
+            return jnp.full((b, n), self.fixed_p, jnp.float64)
+
+        if mode == "mechanism":
+            grid = jnp.linspace(0.0, gamma_max, coarse)
+            g_all = (g[:, None, :] + grid[None, :, None]).reshape(-1, n)
+            c_all = jnp.repeat(c, coarse, axis=0)
+            rep = poa_report(c_all, g_all, dur, **solver_kwargs)
+            poa = jnp.where(rep.solution.converged, rep.poa,
+                            jnp.inf).reshape(b, coarse)
+            ok = poa <= self.target_poa + 1e-9
+            first_ok = jnp.argmax(ok, axis=1)
+            best = jnp.argmin(poa, axis=1)
+            idx = jnp.where(jnp.any(ok, axis=1), first_ok, best)
+            p_all = rep.solution.p.reshape(b, coarse, n)
+            return p_all[jnp.arange(b), idx]
+
+        if mode in ("ne", "ne_worst"):
+            starts = jnp.asarray([0.5, P_MIN, 1.0], jnp.float64)
+            s = starts.shape[0]
+            c_all = jnp.tile(c, (s, 1))
+            g_all = jnp.tile(g, (s, 1))
+            p0 = jnp.repeat(starts, b)[:, None] * jnp.ones((1, n))
+            sol = solve_heterogeneous(c_all, g_all, dur, p0=p0,
+                                      **solver_kwargs)
+            dev = verify_equilibrium_batched(c_all, g_all, dur, sol.p)
+            cost = social_cost_batched(c_all, dur, sol.p)
+            valid = (sol.converged & (dev <= cert_tol)).reshape(s, b)
+            cost = cost.reshape(s, b)
+            if mode == "ne_worst":
+                score = jnp.where(valid, cost, -jnp.inf)
+                pick = jnp.argmax(score, axis=0)
+            else:
+                score = jnp.where(valid, cost, jnp.inf)
+                pick = jnp.argmin(score, axis=0)
+            pick = jnp.where(jnp.any(valid, axis=0), pick, 0)
+            p_all = sol.p.reshape(s, b, n)
+            return p_all[pick, jnp.arange(b)]
+
+        if mode == "centralized":
+            sol = solve_heterogeneous(c, g, dur, **solver_kwargs)
+            return planner_batched(c, dur, sol.p)
+
+        raise ValueError(f"unknown mode {mode!r}")
+
     def participation_probability(self) -> float:
+        """The scalar symmetric participation probability of this mode.
+
+        Returns a plain float in [0, 1] (0.0 when the configured game has
+        no NE / no induced NE). Per-node heterogeneous profiles come from
+        :meth:`solve_batched_heterogeneous` instead — this scalar surface
+        covers the paper's identical-node scenarios.
+        """
         if self.mode == "fixed":
             return float(self.fixed_p)
         if self.mode == "mechanism":
@@ -234,6 +392,7 @@ class ParticipationController:
         return jax.random.bernoulli(key, p, (n_rounds, self.n_nodes))
 
     def new_ledger(self) -> EnergyLedger:
+        """A fresh ``(N,)`` per-node :class:`EnergyLedger` (Joules)."""
         return EnergyLedger.create(self.n_nodes)
 
     def with_roofline(self, clock: RooflineClock) -> "ParticipationController":
@@ -247,6 +406,8 @@ class ParticipationController:
                                    _mech_report=None)
 
     def diagnostics(self) -> dict:
+        """Game/energy summary dict: probabilities and PoA are unitless,
+        ``e_participant_j`` / ``e_idle_j`` are Joules per round."""
         sol = self.solve()
         out = {
             "mode": self.mode,

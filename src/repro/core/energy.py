@@ -36,6 +36,7 @@ __all__ = [
     "task_energy",
     "expected_task_energy",
     "calibrate_from_table",
+    "per_node_energy_rates",
     "PAPER_MODEL_BYTES",
 ]
 
@@ -113,6 +114,36 @@ def expected_task_energy(
     return expected_rounds * expected_round_energy(p, params)
 
 
+def per_node_energy_rates(
+    params: "EnergyParams | list[EnergyParams] | tuple[EnergyParams, ...]",
+    n_nodes: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Flatten per-node :class:`EnergyParams` into raw joule-rate vectors.
+
+    Heterogeneous fleets mix hardware tiers (battery sensors vs. mains
+    gateways), i.e. different ``(P_hw, T_train, comm)`` per node. The
+    campaign engine consumes raw per-round rates, so this helper resolves a
+    node-indexed list of :class:`EnergyParams` into the
+    ``(e_participant_j, e_idle_j)`` vectors it vmaps over.
+
+    Args:
+        params: one shared :class:`EnergyParams` (requires ``n_nodes``) or a
+            length-N sequence, one per node.
+        n_nodes: fleet size when ``params`` is a single instance.
+
+    Returns:
+        ``(e_participant_j, e_idle_j)`` — two ``(N,)`` float64 arrays in
+        Joules per round (eq. 4 / eq. 5 evaluated per node).
+    """
+    if isinstance(params, EnergyParams):
+        if n_nodes is None:
+            raise ValueError("n_nodes required for a single EnergyParams")
+        params = [params] * n_nodes
+    e_part = jnp.asarray([e.e_participant_j for e in params], jnp.float64)
+    e_idle = jnp.asarray([e.e_idle_j for e in params], jnp.float64)
+    return e_part, e_idle
+
+
 def calibrate_from_table(
     p_idle_w: float = 96.85,
     t_round_s: float = 10.0,
@@ -177,10 +208,18 @@ class EnergyLedger:
     ) -> "EnergyLedger":
         """Record one round from raw per-round joule rates.
 
-        Unlike :meth:`record_round` the rates may be traced scalars, so a
-        batch of scenarios with *different* :class:`EnergyParams` can be
+        Unlike :meth:`record_round` the rates may be traced values — a
+        scalar (symmetric hardware) or an ``(N,)`` per-node vector
+        (heterogeneous fleet; see :func:`per_node_energy_rates`) — so a
+        batch of scenarios with *different* energy models can be
         ``vmap``-ed over ``(e_participant_j, e_idle_j)`` arrays inside one
         jitted campaign program.
+
+        Args:
+            mask: ``(N,)`` bool/0-1 — who participated this round. Nodes
+                with ``mask[i] == False`` (including churned-out nodes)
+                accrue ``e_idle_j`` only.
+            e_participant_j / e_idle_j: Joules per round, scalar or ``(N,)``.
         """
         maskf = jnp.asarray(mask, jnp.float64)
         node_j = maskf * e_participant_j + (1.0 - maskf) * e_idle_j
@@ -193,11 +232,19 @@ class EnergyLedger:
 
     @property
     def total_j(self) -> jax.Array:
-        return jnp.sum(self.per_node_j)
+        """Scalar task energy in Joules (``(B,)`` for a batched ledger)."""
+        return jnp.sum(self.per_node_j, axis=-1)
 
     @property
     def total_wh(self) -> jax.Array:
+        """Scalar task energy in Watt-hours (``(B,)`` when batched)."""
         return self.total_j / J_PER_WH
+
+    @property
+    def per_node_wh(self) -> jax.Array:
+        """``(N,)`` cumulative per-node energy in Watt-hours (``(B, N)``
+        when the ledger carries a leading batch axis)."""
+        return self.per_node_j / J_PER_WH
 
     def summary(self) -> dict[str, Any]:
         return {

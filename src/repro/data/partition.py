@@ -8,9 +8,14 @@ used in the ablation example).
 """
 from __future__ import annotations
 
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["iid_partition", "dirichlet_partition"]
+__all__ = ["iid_partition", "dirichlet_partition", "pad_shards",
+           "sharded_client_data"]
 
 
 def iid_partition(n_samples: int, n_clients: int, seed: int = 0) -> list[np.ndarray]:
@@ -34,3 +39,64 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
         for shard, part in zip(shards, np.split(idx, cuts)):
             shard.extend(part.tolist())
     return [np.sort(np.array(s, dtype=np.int64)) for s in shards]
+
+
+def pad_shards(parts: Sequence[np.ndarray]) -> np.ndarray:
+    """Stack ragged per-client index shards into one ``(N, maxlen)`` array.
+
+    Shorter shards wrap around (``np.resize``) so every client exposes the
+    same shard length — the fixed shape the campaign engine needs to
+    ``vmap`` local training across clients.
+
+    Raises:
+        ValueError: if any shard is empty — ``np.resize`` would silently
+            turn it into all-zero indices, i.e. train that client on
+            sample 0 of the *global* dataset (easy to hit with strongly
+            skewed :func:`dirichlet_partition` draws on small datasets).
+    """
+    empty = [i for i, p in enumerate(parts) if len(p) == 0]
+    if empty:
+        raise ValueError(
+            f"clients {empty} have empty shards; re-partition (larger "
+            f"dataset, higher alpha, or different seed) — padding would "
+            f"silently map them to global sample 0")
+    maxlen = max(len(p) for p in parts)
+    return np.stack([np.resize(np.asarray(p), maxlen) for p in parts])
+
+
+def sharded_client_data(images, labels, parts: Sequence[np.ndarray], *,
+                        seed: int = 1):
+    """Per-node data-shard API for the scan-fused campaign engine.
+
+    Materializes an arbitrary (iid or non-iid) index partition into the
+    ``client_data(cid, round, batch, steps)`` callback the engine vmaps
+    over clients — each node samples minibatches *only from its own shard*,
+    so label-skewed fleets (:func:`dirichlet_partition`) plug straight into
+    :func:`repro.federated.campaign.run_campaigns` with no hand-rolled
+    masking.
+
+    Args:
+        images / labels: full dataset arrays, leading axis = samples.
+        parts: per-client index shards (e.g. from :func:`iid_partition` or
+            :func:`dirichlet_partition`); padded to equal length via
+            :func:`pad_shards`.
+        seed: PRNG seed of the per-(client, round) minibatch sampling.
+
+    Returns:
+        ``client_data(cid, rnd, n, steps)`` returning a batch pytree with
+        leaves of shape ``(steps, n, ...)`` (leading axis = local steps),
+        deterministic in ``(seed, cid, rnd)`` and safe to call under
+        ``vmap`` with a traced ``cid``.
+    """
+    shards = pad_shards(parts)
+    maxlen = shards.shape[1]
+    images = jnp.asarray(np.asarray(images)[shards])
+    labels = jnp.asarray(np.asarray(labels)[shards])
+
+    def client_data(cid, rnd, n, steps):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), cid), rnd)
+        idx = jax.random.randint(key, (steps, n), 0, maxlen)
+        return {"images": images[cid][idx], "labels": labels[cid][idx]}
+
+    return client_data

@@ -1,4 +1,4 @@
-"""Scan-fused multi-scenario FL campaign engine.
+"""Scan-fused multi-scenario FL campaign engine (heterogeneous fleets).
 
 The paper's headline artifacts (Table II, Figs. 4-5) are *sweeps*: full
 FedAvg campaigns repeated over participation probabilities or (gamma, cost)
@@ -9,22 +9,39 @@ rounds times scenarios).
 
 Here the whole campaign is one XLA program:
 
-* one **round** = draw Bernoulli masks → vmap local training → masked
-  FedAvg merge → validation → :class:`EnergyLedger` update →
-  :class:`ConvergenceTracker` update → :class:`AoITracker` update;
-* the round loop is a ``lax.scan`` with all trackers in the carry.
-  Convergence cannot break a fixed-shape scan, so post-convergence rounds
-  are masked to accounting no-ops (model frozen, ledger/tracker/AoI
-  untouched) — realized energy, participation, and AoI therefore match the
+* one **round** = (optional churn draw: arrival/departure masks update the
+  fleet-presence carry) → draw Bernoulli participation masks (``& present``)
+  → vmap local training → masked FedAvg merge → validation →
+  :class:`EnergyLedger` update → :class:`ConvergenceTracker` update →
+  :class:`AoITracker` update;
+* the round loop is a ``lax.scan`` with all trackers (and, under churn, the
+  presence mask + per-node presence counts) in the carry. Convergence
+  cannot break a fixed-shape scan, so post-convergence rounds are masked to
+  accounting no-ops (model frozen, ledger/tracker/AoI/presence untouched) —
+  realized energy, participation, and AoI therefore match the
   early-stopping reference exactly;
-* a batch of scenarios — per-scenario ``p`` vectors (or probabilities
-  resolved from a (gamma, cost) grid via
-  :meth:`repro.core.controller.ParticipationController.solve_batched`),
-  seeds, and energy rates — is ``jax.vmap``-ed over the scanned campaign.
+* a batch of scenarios — per-scenario **or per-node** ``p`` (shape ``(B,)``
+  or ``(B, N)``; heterogeneous profiles come straight from
+  :meth:`repro.core.controller.ParticipationController.solve_batched` in
+  its heterogeneous mode), seeds, and energy rates (scalar-per-scenario
+  ``(B,)`` or per-node ``(B, N)`` Joules/round) — is ``jax.vmap``-ed over
+  the scanned campaign.
 
-``benchmarks/campaign_sweep.py`` measures the result: a Table II-style
-sweep compiles to one jitted program and runs orders of magnitude faster
-than looping the reference.
+This is the first place the game layer's full heterogeneity (per-node
+costs/γ, certified asymmetric equilibria, stratified fleets) reaches the FL
+runtime: the engine replays a ``(B, N)`` probability *matrix*, meters
+per-node energy at per-node rates, and models node churn, while constant
+rows with scalar rates and no churn reproduce the symmetric engine
+bitwise (pinned in ``tests/test_hetero_campaign.py``).
+
+``benchmarks/campaign_sweep.py`` and
+``benchmarks/heterogeneous_campaign.py`` measure the result: Table II-style
+and stratified-fleet sweeps compile to one jitted program and run orders of
+magnitude faster than looping the per-node Python reference
+(:func:`repro.federated.simulation.run_heterogeneous_reference`).
+
+See ``docs/architecture.md`` for the layer diagram and the scan-carry /
+reference-oracle conventions, and ``docs/api.md`` for runnable snippets.
 """
 from __future__ import annotations
 
@@ -40,12 +57,56 @@ from repro.federated.client import make_local_train
 from repro.federated.server import ConvergenceTracker, fedavg_merge
 from repro.optim.base import Optimizer
 
-__all__ = ["CampaignResult", "build_campaign", "run_campaigns"]
+__all__ = ["CampaignResult", "ChurnConfig", "build_campaign", "run_campaigns"]
+
+# RNG stream offsets shared with the reference simulators — masks (and hence
+# ledgers/AoI) are bitwise-comparable between engine and oracle.
+MASK_STREAM = 10_000    # participation Bernoulli draws, one fold per round
+CHURN_STREAM = 20_000   # arrival/departure draws, one fold per round
 
 
 def _tree_select(cond: jax.Array, on_true, on_false):
     """Leafwise ``where`` — keeps scan carries type-stable under masking."""
     return jax.tree.map(lambda t, f: jnp.where(cond, t, f), on_true, on_false)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Per-round fleet churn: a 2-state Markov chain per node.
+
+    At the start of every round each *present* node departs with
+    probability ``departure`` and each *absent* node (re-)arrives with
+    probability ``arrival``; the updated presence mask then gates
+    participation (``mask = Bernoulli(p) & present``). Departed nodes
+    accrue idle-only energy (they are still powered IoT devices) and their
+    AoI is frozen (no fresh information is expected of them) — the
+    invariants pinned in ``tests/test_hetero_campaign.py``.
+
+    Attributes:
+        arrival: per-round (re-)arrival probability — scalar, ``(N,)``,
+            ``(B, 1)``, or ``(B, N)`` (broadcast to ``(B, N)``).
+        departure: per-round departure probability, same shapes.
+        present0: initial presence (bool, broadcastable to ``(B, N)``);
+            default: everyone starts in the fleet.
+
+    ``ChurnConfig()`` (all defaults) is the no-churn identity: presence
+    stays all-true and participation masks equal the churn-free engine's.
+    """
+
+    arrival: Any = 0.0
+    departure: Any = 0.0
+    present0: Any = True
+
+    def as_arrays(self, batch: int, n: int) -> tuple[jax.Array, ...]:
+        """Broadcast to the engine's ``(B, N)`` inputs."""
+        arr = jnp.broadcast_to(
+            jnp.atleast_2d(jnp.asarray(self.arrival, jnp.float64)), (batch, n))
+        dep = jnp.broadcast_to(
+            jnp.atleast_2d(jnp.asarray(self.departure, jnp.float64)),
+            (batch, n))
+        pres = jnp.broadcast_to(
+            jnp.atleast_2d(jnp.asarray(self.present0, bool)), (batch, n))
+        return arr, dep, pres
 
 
 @dataclasses.dataclass
@@ -63,18 +124,25 @@ class CampaignResult:
     converged_at: jax.Array      # (B,) round index or -1
     converged: jax.Array         # (B,) bool
     rounds: jax.Array            # (B,) realized rounds (early stop honoured)
-    energy_wh: jax.Array         # (B,) realized task energy
+    energy_wh: jax.Array         # (B,) realized task energy [Wh]
     acc_history: jax.Array       # (B, R)
     k_history: jax.Array         # (B, R) participants per round
     participation_rate: jax.Array  # (B,) mean realized participation
-    per_node_aoi: jax.Array      # (B, N) realized mean age per node
-    mean_aoi: jax.Array          # (B,) fleet-mean realized AoI
+    per_node_aoi: jax.Array      # (B, N) realized mean age per node [rounds]
+    mean_aoi: jax.Array          # (B,) fleet-mean realized AoI [rounds]
     ledger: EnergyLedger         # batched (leaves carry leading B axis)
     aoi: AoITracker              # batched
+    present_counts: jax.Array    # (B, N) rounds each node was in the fleet
+    present_final: jax.Array     # (B, N) bool presence after the last round
 
     @property
     def batch(self) -> int:
         return int(self.rounds.shape[0])
+
+    @property
+    def per_node_energy_wh(self) -> jax.Array:
+        """``(B, N)`` realized per-node energy in Watt-hours."""
+        return self.ledger.per_node_wh
 
     def scenario_ledger(self, i: int) -> EnergyLedger:
         """The i-th scenario's ledger as an unbatched :class:`EnergyLedger`."""
@@ -96,22 +164,48 @@ def build_campaign(
     client_data: Callable,
     val_batch: dict,
     opt: Optimizer,
+    *,
+    churn: bool = False,
 ):
     """Compile the campaign engine for one task definition.
 
     Args mirror :func:`repro.federated.simulation.run_simulation`; ``fl`` is
     an :class:`~repro.federated.simulation.FLConfig` (``max_rounds`` fixes
-    the static scan length).
+    the static scan length). ``churn`` is a *static* flag: the churn-free
+    program is built without any presence logic, so it stays instruction-
+    identical to the symmetric engine.
 
-    Returns a jitted ``fn(p, seeds, e_participant_j, e_idle_j)`` mapping
-    ``(B, N)`` probabilities, ``(B,)`` seeds, and ``(B,)`` per-round joule
-    rates to the raw batched scan state (dict of params/ledger/tracker/aoi/
-    accs/ks). Use :func:`run_campaigns` for the friendly wrapper.
+    Returns a jitted engine:
+
+    * ``churn=False`` — ``fn(p, seeds, e_participant_j, e_idle_j)``;
+    * ``churn=True``  — ``fn(p, seeds, e_participant_j, e_idle_j,
+      arrival, departure, present0)``.
+
+    ``p`` is ``(B, N)``; ``seeds`` ``(B,)``; the joule rates are per-round
+    energies, ``(B,)`` scalar-per-scenario or ``(B, N)`` per-node; the churn
+    probabilities/presence are ``(B, N)``. The engine returns the raw
+    batched scan state (dict of params/ledger/tracker/aoi/accs/ks, plus
+    present/present_counts under churn). Use :func:`run_campaigns` for the
+    friendly wrapper.
     """
     n = fl.n_clients
     train_one = make_local_train(loss_fn, opt)
 
-    def one_campaign(p_vec, seed, e_participant_j, e_idle_j):
+    def train_round(params, p_vec, mask_rng, r):
+        """Shared round body: masks → local training → merge → validation."""
+        mask = jax.random.bernoulli(mask_rng, p_vec, (n,))
+        batches = jax.vmap(
+            lambda cid: client_data(cid, r, fl.batch_per_client,
+                                    fl.local_steps))(jnp.arange(n))
+        client_params, _ = jax.vmap(train_one, in_axes=(None, 0))(
+            params, batches)
+        return mask, client_params
+
+    # One body for both engines: ``churn`` is static Python, so the
+    # branches below resolve at trace time — the churn-free program is
+    # instruction-identical to the symmetric engine's.
+    def one_campaign(p_vec, seed, e_participant_j, e_idle_j,
+                     arrival=None, departure=None, present0=None):
         key = jax.random.PRNGKey(seed)
         state0 = (
             init_params(jax.random.fold_in(key, 1)),
@@ -120,43 +214,73 @@ def build_campaign(
             AoITracker.create(n),
             jnp.zeros((), jnp.float64),          # last recorded accuracy
         )
+        if churn:
+            state0 += (
+                jnp.asarray(present0, bool),     # fleet presence
+                jnp.zeros((n,), jnp.int64),      # per-node presence rounds
+            )
 
         def round_step(carry, r):
-            params, ledger, tracker, aoi, last_acc = carry
+            params, ledger, tracker, aoi, last_acc, *presence = carry
             active = ~tracker.converged
+            if churn:
+                present, pcount = presence
+                # Churn draws come from their own stream (CHURN_STREAM), so
+                # the participation stream — and with zero churn the masks
+                # themselves — stay bitwise-identical to the churn-free
+                # engine.
+                ka, kd = jax.random.split(
+                    jax.random.fold_in(key, CHURN_STREAM + r))
+                arrive = jax.random.bernoulli(ka, arrival, (n,))
+                depart = jax.random.bernoulli(kd, departure, (n,))
+                here = jnp.where(present, ~depart, arrive)
+            else:
+                here = None
+
             # Same RNG stream as the Python-loop reference: masks (and hence
             # energy/participation/AoI) are bitwise-identical per round.
-            rng = jax.random.fold_in(key, 10_000 + r)
-            mask = jax.random.bernoulli(rng, p_vec, (n,))
-            batches = jax.vmap(
-                lambda cid: client_data(cid, r, fl.batch_per_client,
-                                        fl.local_steps))(jnp.arange(n))
-            client_params, _ = jax.vmap(train_one, in_axes=(None, 0))(
-                params, batches)
+            rng = jax.random.fold_in(key, MASK_STREAM + r)
+            mask, client_params = train_round(params, p_vec, rng, r)
+            if churn:
+                mask = mask & here               # absentees cannot join
             merged = fedavg_merge(params, client_params, mask)
             acc = eval_fn(merged, val_batch)
 
+            new_acc = jnp.where(active, acc, last_acc)
             new_carry = (
                 _tree_select(active, merged, params),
                 _tree_select(active,
                              ledger.record_round_j(mask, e_participant_j,
                                                    e_idle_j), ledger),
                 tracker.masked_update(acc, jnp.asarray(r, jnp.int32), active),
-                _tree_select(active, aoi.update(mask), aoi),
-                jnp.where(active, acc, last_acc),
+                _tree_select(active, aoi.update(mask, here), aoi),
+                new_acc,
             )
+            if churn:
+                new_carry += (
+                    jnp.where(active, here, present),
+                    pcount + jnp.where(active,
+                                       jnp.asarray(here, jnp.int64), 0),
+                )
             k = jnp.where(active, jnp.sum(jnp.asarray(mask, jnp.int32)), 0)
-            return new_carry, (new_carry[-1], k)
+            return new_carry, (new_acc, k)
 
-        (params, ledger, tracker, aoi, _), (accs, ks) = jax.lax.scan(
-            round_step, state0, jnp.arange(fl.max_rounds))
-        return {"params": params, "ledger": ledger, "tracker": tracker,
-                "aoi": aoi, "accs": accs, "ks": ks}
+        final, (accs, ks) = jax.lax.scan(round_step, state0,
+                                         jnp.arange(fl.max_rounds))
+        out = {"params": final[0], "ledger": final[1], "tracker": final[2],
+               "aoi": final[3], "accs": accs, "ks": ks}
+        if churn:
+            out.update(present=final[5], present_counts=final[6])
+        return out
 
-    return jax.jit(jax.vmap(one_campaign))
+    if churn:
+        return jax.jit(jax.vmap(one_campaign))
+    return jax.jit(jax.vmap(
+        lambda p, s, ep, ei: one_campaign(p, s, ep, ei)))
 
 
 def _energy_rates(energy, batch: int) -> tuple[jax.Array, jax.Array]:
+    """Per-scenario ``(B,)`` joule rates from :class:`EnergyParams` input."""
     if energy is None:
         energy = EnergyParams()
     if isinstance(energy, EnergyParams):
@@ -166,6 +290,36 @@ def _energy_rates(energy, batch: int) -> tuple[jax.Array, jax.Array]:
     e_part = jnp.asarray([e.e_participant_j for e in energy], jnp.float64)
     e_idle = jnp.asarray([e.e_idle_j for e in energy], jnp.float64)
     return e_part, e_idle
+
+
+def _raw_rate(rate, batch: int, n: int, name: str) -> jax.Array:
+    """Normalize one raw joule-rate input to ``(B,)`` or ``(B, N)``.
+
+    1-D inputs are *per-scenario* rates (length B); anything per-node must
+    be 2-D (``(1, N)`` or ``(B, N)``). When B == N a 1-D vector is
+    ambiguous — e.g. the ``(N,)`` output of
+    :func:`~repro.core.energy.per_node_energy_rates` passed without the
+    ``[None, :]`` — and is rejected rather than silently metering scenario
+    i at node i's rate.
+    """
+    r = jnp.asarray(rate, jnp.float64)
+    if r.ndim == 0:
+        return jnp.broadcast_to(r, (batch,))
+    if r.ndim == 1:
+        if batch == n:
+            raise ValueError(
+                f"{name}: B == N == {batch}, so a 1-D rate vector is "
+                f"ambiguous; pass rates[:, None] for per-scenario or "
+                f"rates[None, :] for per-node")
+        if r.shape[0] != batch:
+            raise ValueError(
+                f"{name}: 1-D rates are per-scenario and must have length "
+                f"B={batch}, got {r.shape}; pass (1, N) or (B, N) for "
+                f"per-node rates")
+        return r
+    if r.ndim == 2:
+        return jnp.broadcast_to(r, (batch, n))
+    raise ValueError(f"{name}: rank-{r.ndim} rates unsupported")
 
 
 def run_campaigns(
@@ -179,6 +333,8 @@ def run_campaigns(
     p: jax.Array,
     *,
     energy: EnergyParams | Sequence[EnergyParams] | None = None,
+    energy_rates_j: tuple[jax.Array, jax.Array] | None = None,
+    churn: ChurnConfig | None = None,
     seeds: Sequence[int] | jax.Array | None = None,
     engine: Callable | None = None,
 ) -> CampaignResult:
@@ -186,15 +342,34 @@ def run_campaigns(
 
     Args:
         p: scenario participation — scalar, ``(B,)`` symmetric
-            probabilities, or ``(B, N)`` per-node vectors.
-        energy: one shared :class:`EnergyParams` or one per scenario.
+            probabilities, or a ``(B, N)`` per-node matrix (e.g. the
+            certified asymmetric equilibria out of
+            :meth:`repro.core.controller.ParticipationController.solve_batched`).
+        energy: one shared :class:`EnergyParams` or one per scenario
+            (symmetric within each scenario).
+        energy_rates_j: raw per-round joule rates
+            ``(e_participant_j, e_idle_j)`` overriding ``energy``. Each may
+            be a scalar, a per-scenario ``(B,)`` vector, or a per-node
+            ``(1, N)`` / ``(B, N)`` matrix — the heterogeneous-fleet path
+            (see :func:`repro.core.energy.per_node_energy_rates`).
+        churn: optional :class:`ChurnConfig` enabling the fleet-churn model
+            (presence mask folded into the scan carry). ``None`` builds the
+            churn-free program — instruction-identical to the symmetric
+            engine.
         seeds: per-scenario PRNG seeds (default: ``fl.seed`` for all — the
             scenarios then share model init and data streams, isolating the
             effect of ``p``).
         engine: a prebuilt :func:`build_campaign` program. Pass it when
             sweeping repeatedly over one task so the XLA compile is paid
             once (a fresh engine is built — and traced — per call
-            otherwise).
+            otherwise). Must have been built with ``churn=True`` iff
+            ``churn`` is passed here.
+
+    Returns:
+        A :class:`CampaignResult`; per-node realized splits live in
+        ``per_node_energy_wh`` (Wh), ``per_node_aoi`` (rounds), the
+        batched ``ledger``, and — under churn — ``present_counts`` /
+        ``present_final``.
     """
     n = fl.n_clients
     # Preserve the caller's p dtype: bernoulli draws its uniforms in p's
@@ -202,21 +377,37 @@ def run_campaigns(
     p_arr = jnp.atleast_1d(jnp.asarray(p))
     if p_arr.ndim == 1:
         p_arr = jnp.broadcast_to(p_arr[:, None], (p_arr.shape[0], n))
+    if p_arr.shape[1] != n:
+        raise ValueError(f"p {p_arr.shape} for n_clients={n}")
     batch = p_arr.shape[0]
     seeds = (jnp.full((batch,), fl.seed, jnp.uint32) if seeds is None
              else jnp.asarray(seeds, jnp.uint32))
     if seeds.shape != (batch,):
         raise ValueError(f"seeds {seeds.shape} for {batch} scenarios")
-    e_part, e_idle = _energy_rates(energy, batch)
+    if energy_rates_j is not None:
+        e_part = _raw_rate(energy_rates_j[0], batch, n, "e_participant_j")
+        e_idle = _raw_rate(energy_rates_j[1], batch, n, "e_idle_j")
+    else:
+        e_part, e_idle = _energy_rates(energy, batch)
 
     fn = engine if engine is not None else build_campaign(
-        fl, init_params, loss_fn, eval_fn, client_data, val_batch, opt)
-    out = fn(p_arr, seeds, e_part, e_idle)
+        fl, init_params, loss_fn, eval_fn, client_data, val_batch, opt,
+        churn=churn is not None)
+    if churn is not None:
+        arrival, departure, present0 = churn.as_arrays(batch, n)
+        out = fn(p_arr, seeds, e_part, e_idle, arrival, departure, present0)
+    else:
+        out = fn(p_arr, seeds, e_part, e_idle)
 
     tracker, ledger, aoi = out["tracker"], out["ledger"], out["aoi"]
     converged = tracker.converged_at >= 0
     rounds = jnp.where(converged, tracker.converged_at + 1, fl.max_rounds)
-    per_node_aoi = aoi.per_node_aoi
+    if churn is not None:
+        present_counts = out["present_counts"]
+        present_final = out["present"]
+    else:
+        present_counts = jnp.broadcast_to(rounds[:, None], (batch, n))
+        present_final = jnp.ones((batch, n), bool)
     return CampaignResult(
         p=p_arr,
         seeds=seeds,
@@ -229,8 +420,10 @@ def run_campaigns(
         participation_rate=jnp.mean(
             ledger.participation_counts
             / jnp.maximum(ledger.rounds, 1)[:, None], axis=-1),
-        per_node_aoi=per_node_aoi,
+        per_node_aoi=aoi.per_node_aoi,
         mean_aoi=aoi.mean_aoi,
         ledger=ledger,
         aoi=aoi,
+        present_counts=present_counts,
+        present_final=present_final,
     )

@@ -30,14 +30,16 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.aoi import AoITracker
 from repro.core.controller import ParticipationController
 from repro.core.energy import EnergyLedger, EnergyParams
 from repro.federated.client import local_train
 from repro.federated.server import ConvergenceTracker, fedavg_merge
 from repro.optim.base import Optimizer
 
-__all__ = ["FLConfig", "FLResult", "run_simulation",
-           "run_simulation_reference"]
+__all__ = ["FLConfig", "FLResult", "HeterogeneousReference",
+           "run_simulation", "run_simulation_reference",
+           "run_heterogeneous_reference"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,4 +192,142 @@ def run_simulation_reference(
             ledger.participation_counts / jnp.maximum(ledger.rounds, 1))),
         wall_s=wall,
         ledger_summary=ledger.summary(),
+    )
+
+
+@dataclasses.dataclass
+class HeterogeneousReference:
+    """Outcome of :func:`run_heterogeneous_reference` (one scenario).
+
+    Attributes:
+        rounds: realized rounds (eager early stop).
+        converged: whether the accuracy target was hit.
+        acc_history: per-round validation accuracies (length ``rounds``).
+        ledger: the eager :class:`~repro.core.energy.EnergyLedger`
+            (``per_node_j`` in Joules).
+        aoi: the eager :class:`~repro.core.aoi.AoITracker`.
+        present_counts: ``(N,)`` rounds each node was in the fleet.
+        present_final: ``(N,)`` bool presence after the last round.
+        wall_s: wall-clock seconds of the Python round loop.
+    """
+
+    rounds: int
+    converged: bool
+    acc_history: list
+    ledger: EnergyLedger
+    aoi: AoITracker
+    present_counts: jax.Array
+    present_final: jax.Array
+    wall_s: float
+
+
+def run_heterogeneous_reference(
+    fl: FLConfig,
+    init_params: Callable[[jax.Array], dict],
+    loss_fn: Callable,
+    eval_fn: Callable,
+    client_data: Callable,
+    val_batch: dict,
+    opt: Optimizer,
+    p: jax.Array,
+    *,
+    energy_rates_j: tuple | None = None,
+    energy: EnergyParams | None = None,
+    churn=None,
+) -> HeterogeneousReference:
+    """Per-node Python round loop — the heterogeneous engine's test oracle.
+
+    The simplest possible statement of the heterogeneous round semantics:
+    one jitted program per *round*, eager per-node ledger/AoI updates,
+    eager presence bookkeeping, early ``break`` on convergence. The
+    scan-fused engine (:func:`repro.federated.campaign.run_campaigns`)
+    draws every random variable from the *same* RNG streams
+    (``MASK_STREAM`` / ``CHURN_STREAM`` folds of ``PRNGKey(fl.seed)``), so
+    the two produce bitwise-identical masks, per-node ledgers, and AoI
+    trackers — pinned in ``tests/test_hetero_campaign.py``.
+
+    Args:
+        p: scalar or ``(N,)`` per-node participation probabilities (dtype
+            preserved — Bernoulli uniforms are drawn in ``p``'s dtype).
+        energy_rates_j: ``(e_participant_j, e_idle_j)`` per-round Joule
+            rates, scalars or ``(N,)`` per-node vectors; overrides
+            ``energy``.
+        energy: shared :class:`EnergyParams` (default paper Table I).
+        churn: optional :class:`~repro.federated.campaign.ChurnConfig`
+            (single scenario: fields broadcastable to ``(N,)``).
+    """
+    from repro.federated.campaign import CHURN_STREAM, MASK_STREAM
+
+    n = fl.n_clients
+    p_vec = jnp.asarray(p)
+    if p_vec.ndim == 0:
+        p_vec = jnp.broadcast_to(p_vec, (n,))
+    if energy_rates_j is not None:
+        e_part = jnp.asarray(energy_rates_j[0], jnp.float64)
+        e_idle = jnp.asarray(energy_rates_j[1], jnp.float64)
+    else:
+        ep = energy or EnergyParams()
+        e_part = jnp.asarray(ep.e_participant_j, jnp.float64)
+        e_idle = jnp.asarray(ep.e_idle_j, jnp.float64)
+
+    key = jax.random.PRNGKey(fl.seed)
+    params = init_params(jax.random.fold_in(key, 1))
+
+    if churn is not None:
+        arrival, departure, present0 = (a[0] for a in churn.as_arrays(1, n))
+        present = jnp.asarray(present0, bool)
+    else:
+        present = jnp.ones((n,), bool)
+
+    @jax.jit
+    def round_fn(params, round_idx, rng, present):
+        mask = jax.random.bernoulli(rng, p_vec, (n,)) & present
+        batches = jax.vmap(
+            lambda cid: client_data(cid, round_idx, fl.batch_per_client,
+                                    fl.local_steps))(jnp.arange(n))
+        client_params, _ = jax.vmap(
+            lambda pp, bb: local_train(loss_fn, pp, bb, opt),
+            in_axes=(None, 0))(params, batches)
+        merged = fedavg_merge(params, client_params, mask)
+        return merged, mask, eval_fn(merged, val_batch)
+
+    @jax.jit
+    def churn_fn(rng, present):
+        ka, kd = jax.random.split(rng)
+        arrive = jax.random.bernoulli(ka, arrival, (n,))
+        depart = jax.random.bernoulli(kd, departure, (n,))
+        return jnp.where(present, ~depart, arrive)
+
+    ledger = EnergyLedger.create(n)
+    aoi = AoITracker.create(n)
+    tracker = ConvergenceTracker.create(fl.target_acc, fl.consecutive)
+    present_counts = jnp.zeros((n,), jnp.int64)
+    accs: list[float] = []
+    t0 = time.time()
+    rounds_done = fl.max_rounds
+    for r in range(fl.max_rounds):
+        if churn is not None:
+            present = churn_fn(
+                jax.random.fold_in(key, CHURN_STREAM + r), present)
+            present_counts = present_counts + jnp.asarray(present, jnp.int64)
+        rng = jax.random.fold_in(key, MASK_STREAM + r)
+        params, mask, acc = round_fn(params, jnp.asarray(r), rng, present)
+        ledger = ledger.record_round_j(mask, e_part, e_idle)
+        aoi = aoi.update(mask, present if churn is not None else None)
+        tracker = tracker.update(acc, jnp.asarray(r, jnp.int32))
+        accs.append(float(acc))
+        if bool(tracker.converged):
+            rounds_done = r + 1
+            break
+    if churn is None:
+        present_counts = jnp.full((n,), rounds_done, jnp.int64)
+    return HeterogeneousReference(
+        rounds=rounds_done,
+        converged=bool(tracker.converged),
+        acc_history=accs,
+        ledger=ledger,
+        aoi=aoi,
+        present_counts=present_counts,
+        present_final=present,
+        wall_s=time.time() - t0,
     )

@@ -1,0 +1,252 @@
+"""Heterogeneous-fleet campaign engine: oracle equivalence, symmetric
+reduction, churn accounting invariants, and the controller's heterogeneous
+batched front end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.asymmetric_batched import (social_cost_batched,
+                                           verify_equilibrium_batched)
+from repro.core.controller import ParticipationController
+from repro.core.duration import theoretical_duration
+from repro.core.energy import EnergyParams, per_node_energy_rates
+from repro.federated.campaign import ChurnConfig, run_campaigns
+from repro.federated.simulation import (FLConfig,
+                                        run_heterogeneous_reference)
+from repro.federated.tasks import synthetic_mlp_task
+from repro.optim import sgd
+
+N = 6
+
+
+@pytest.fixture(scope="module")
+def task():
+    return synthetic_mlp_task(noise=2.5)
+
+
+def _fl(**kw):
+    base = dict(n_clients=N, local_steps=1, batch_per_client=8,
+                max_rounds=12, target_acc=0.73, seed=5)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _per_node_setup():
+    p_vec = jnp.asarray(np.linspace(0.2, 0.9, N), jnp.float32)
+    tiers = [EnergyParams(p_hw_w=150.0) if i < N // 2 else EnergyParams()
+             for i in range(N)]
+    e_part, e_idle = per_node_energy_rates(tiers)
+    return p_vec, e_part, e_idle
+
+
+def test_hetero_engine_matches_reference(task):
+    """Scan-fused heterogeneous campaign == per-node Python oracle on shared
+    RNG streams: equal convergence rounds, *bitwise* per-node ledgers and
+    AoI trackers, identical presence accounting — with per-node p, per-node
+    energy rates, and churn all active."""
+    fl = _fl()
+    p_vec, e_part, e_idle = _per_node_setup()
+    churn = ChurnConfig(arrival=0.3, departure=0.25)
+    opt = sgd(0.1)
+
+    res = run_campaigns(fl, *task.campaign_args(), opt, p_vec[None, :],
+                        energy_rates_j=(e_part[None, :], e_idle[None, :]),
+                        churn=churn)
+    ref = run_heterogeneous_reference(fl, *task.campaign_args(), opt, p_vec,
+                                      energy_rates_j=(e_part, e_idle),
+                                      churn=churn)
+    assert int(res.rounds[0]) == ref.rounds
+    assert bool(res.converged[0]) == ref.converged
+    np.testing.assert_array_equal(np.asarray(res.ledger.per_node_j[0]),
+                                  np.asarray(ref.ledger.per_node_j))
+    np.testing.assert_array_equal(
+        np.asarray(res.ledger.participation_counts[0]),
+        np.asarray(ref.ledger.participation_counts))
+    np.testing.assert_array_equal(np.asarray(res.aoi.cum_age[0]),
+                                  np.asarray(ref.aoi.cum_age))
+    np.testing.assert_array_equal(np.asarray(res.aoi.tracked[0]),
+                                  np.asarray(ref.aoi.tracked))
+    np.testing.assert_array_equal(np.asarray(res.present_counts[0]),
+                                  np.asarray(ref.present_counts))
+    np.testing.assert_array_equal(np.asarray(res.present_final[0]),
+                                  np.asarray(ref.present_final))
+    np.testing.assert_allclose(np.asarray(res.acc_history[0][:ref.rounds]),
+                               np.asarray(ref.acc_history),
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_symmetric_reduction_bitwise(task):
+    """A (B, N) campaign with constant rows, scalar-equivalent per-node
+    rates, and zero churn reproduces the symmetric (PR 3) engine bitwise."""
+    fl = _fl(seed=0, max_rounds=10)
+    opt = sgd(0.1)
+    ps = jnp.asarray([0.3, 0.7], jnp.float32)
+    base = run_campaigns(fl, *task.campaign_args(), opt, ps)
+
+    # constant-row (B, N) matrix
+    rows = run_campaigns(fl, *task.campaign_args(), opt,
+                         jnp.broadcast_to(ps[:, None], (2, N)))
+    # per-node rate vectors that all equal the default EnergyParams
+    ep = EnergyParams()
+    rates = (jnp.full((1, N), ep.e_participant_j),
+             jnp.full((1, N), ep.e_idle_j))
+    rated = run_campaigns(fl, *task.campaign_args(), opt,
+                          jnp.broadcast_to(ps[:, None], (2, N)),
+                          energy_rates_j=rates)
+    # zero-churn ChurnConfig (presence logic active but inert)
+    churned = run_campaigns(fl, *task.campaign_args(), opt,
+                            jnp.broadcast_to(ps[:, None], (2, N)),
+                            churn=ChurnConfig())
+
+    for other in (rows, rated, churned):
+        np.testing.assert_array_equal(np.asarray(base.ledger.per_node_j),
+                                      np.asarray(other.ledger.per_node_j))
+        np.testing.assert_array_equal(
+            np.asarray(base.ledger.participation_counts),
+            np.asarray(other.ledger.participation_counts))
+        np.testing.assert_array_equal(np.asarray(base.acc_history),
+                                      np.asarray(other.acc_history))
+        np.testing.assert_array_equal(np.asarray(base.aoi.cum_age),
+                                      np.asarray(other.aoi.cum_age))
+        np.testing.assert_array_equal(np.asarray(base.rounds),
+                                      np.asarray(other.rounds))
+    # inert churn still reports full presence
+    np.testing.assert_array_equal(
+        np.asarray(churned.present_counts),
+        np.asarray(np.broadcast_to(np.asarray(base.rounds)[:, None],
+                                   (2, N))))
+    assert bool(jnp.all(churned.present_final))
+
+
+def test_churn_accounting_invariants(task):
+    """Departed nodes accrue idle-only energy, never participate, and their
+    AoI is frozen; presence counts stay within realized rounds."""
+    fl = _fl(seed=2, max_rounds=15, target_acc=1.01)  # never converges
+    opt = sgd(0.1)
+    p_vec = jnp.full((N,), 0.8, jnp.float32)
+    ep = EnergyParams()
+    # nodes 0-1 depart at round 0 and never return; the rest are stable
+    departure = jnp.asarray([1.0, 1.0] + [0.0] * (N - 2))
+    churn = ChurnConfig(arrival=0.0, departure=departure[None, :])
+    res = run_campaigns(fl, *task.campaign_args(), opt, p_vec[None, :],
+                        churn=churn)
+    rounds = int(res.rounds[0])
+    assert rounds == fl.max_rounds
+
+    per_node_j = np.asarray(res.ledger.per_node_j[0])
+    counts = np.asarray(res.ledger.participation_counts[0])
+    # departed: idle-only energy, zero participation, frozen AoI
+    np.testing.assert_allclose(per_node_j[:2], rounds * ep.e_idle_j)
+    assert np.all(counts[:2] == 0)
+    np.testing.assert_array_equal(np.asarray(res.aoi.tracked[0])[:2], 0)
+    np.testing.assert_array_equal(np.asarray(res.aoi.cum_age[0])[:2], 0.0)
+    np.testing.assert_array_equal(np.asarray(res.per_node_aoi[0])[:2], 0.0)
+    np.testing.assert_array_equal(np.asarray(res.present_counts[0])[:2], 0)
+    assert not bool(jnp.any(res.present_final[0][:2]))
+    # survivors: counted every round, energy strictly above the idle floor
+    np.testing.assert_array_equal(np.asarray(res.present_counts[0])[2:],
+                                  rounds)
+    assert np.all(per_node_j[2:] > rounds * ep.e_idle_j)
+    assert np.all(counts[2:] > 0)
+    # fleet energy decomposes exactly into participant/idle rates
+    want = (counts * ep.e_participant_j
+            + (rounds - counts) * ep.e_idle_j)
+    np.testing.assert_allclose(per_node_j, want)
+
+
+def test_run_campaigns_rate_validation(task):
+    fl = _fl()
+    with pytest.raises(ValueError, match="per-scenario"):
+        run_campaigns(fl, *task.campaign_args(), sgd(0.1),
+                      jnp.asarray([0.5], jnp.float32),
+                      energy_rates_j=(jnp.ones((N,)), 1.0))
+    # B == N: a 1-D rate vector is ambiguous (per-scenario vs per-node)
+    with pytest.raises(ValueError, match="ambiguous"):
+        run_campaigns(fl, *task.campaign_args(), sgd(0.1),
+                      jnp.full((N,), 0.5, jnp.float32),
+                      energy_rates_j=(jnp.ones((N,)), jnp.ones((N,))))
+    with pytest.raises(ValueError, match="n_clients"):
+        run_campaigns(fl, *task.campaign_args(), sgd(0.1),
+                      jnp.ones((1, N + 1), jnp.float32))
+
+
+def test_pad_shards_rejects_empty():
+    from repro.data.partition import pad_shards
+    with pytest.raises(ValueError, match="empty"):
+        pad_shards([np.arange(4), np.arange(0)])
+    assert pad_shards([np.arange(4), np.arange(2)]).shape == (2, 4)
+
+
+# ---- controller heterogeneous front end ------------------------------------
+
+N_GAME = 8
+
+
+@pytest.fixture(scope="module")
+def hetero_ctrl():
+    return ParticipationController(
+        n_nodes=N_GAME, gamma=0.2, cost=6.0,
+        duration_model=theoretical_duration(N_GAME))
+
+
+def test_controller_heterogeneous_ne_certified(hetero_ctrl):
+    """2-D (costs, gammas) dispatch returns certified (B, N) asymmetric
+    NEs, and the worst NE never undercuts the best one's social cost."""
+    rng = np.random.default_rng(0)
+    costs = jnp.asarray(rng.uniform(1.0, 8.0, (3, N_GAME)))
+    gammas = jnp.full((3, N_GAME), 0.2)
+    kw = dict(damping=0.6, max_iters=300)
+    dur = hetero_ctrl.duration_model
+
+    p_ne = hetero_ctrl.solve_batched(gammas, costs, mode="ne", **kw)
+    assert p_ne.shape == (3, N_GAME)
+    dev = verify_equilibrium_batched(costs, gammas, dur, p_ne)
+    assert float(jnp.max(dev)) <= 1e-3
+
+    p_worst = hetero_ctrl.solve_batched(gammas, costs, mode="ne_worst", **kw)
+    c_ne = social_cost_batched(costs, dur, p_ne)
+    c_worst = social_cost_batched(costs, dur, p_worst)
+    assert bool(jnp.all(c_ne <= c_worst + 1e-9))
+
+    p_plan = hetero_ctrl.solve_batched(gammas, costs, mode="centralized",
+                                       **kw)
+    c_plan = social_cost_batched(costs, dur, p_plan)
+    assert bool(jnp.all(c_plan <= c_ne + 1e-9))
+
+    p_fix = hetero_ctrl.solve_batched(gammas, costs, mode="fixed")
+    np.testing.assert_allclose(np.asarray(p_fix), hetero_ctrl.fixed_p)
+
+
+def test_controller_heterogeneous_mechanism_improves(hetero_ctrl):
+    """The uniform-γ* mechanism's induced NE costs no more (socially) than
+    the selfish NE on a stratifying identical fleet."""
+    costs = jnp.full((1, N_GAME), 6.0)
+    gammas = jnp.full((1, N_GAME), 0.2)
+    kw = dict(damping=0.6, max_iters=300)
+    dur = hetero_ctrl.duration_model
+    p_ne = hetero_ctrl.solve_batched(gammas, costs, mode="ne", **kw)
+    p_mech = hetero_ctrl.solve_batched(gammas, costs, mode="mechanism",
+                                       coarse=8, **kw)
+    assert p_mech.shape == (1, N_GAME)
+    # the dispatch forwards coarse (regression: it used to drop it)
+    direct = hetero_ctrl.solve_batched_heterogeneous(
+        gammas, costs, "mechanism", coarse=8, **kw)
+    np.testing.assert_array_equal(np.asarray(p_mech), np.asarray(direct))
+    # the AoI reward lifts fleet-wide participation
+    assert float(jnp.mean(p_mech)) > float(jnp.mean(p_ne))
+    c_ne = float(social_cost_batched(costs, dur, p_ne)[0])
+    c_mech = float(social_cost_batched(costs, dur, p_mech)[0])
+    plan = hetero_ctrl.solve_batched(gammas, costs, mode="centralized", **kw)
+    c_plan = float(social_cost_batched(costs, dur, plan)[0])
+    # induced PoA within the controller's target of the planner
+    assert c_mech / c_plan <= hetero_ctrl.target_poa + 0.05
+
+
+def test_controller_heterogeneous_rejects_bad_shapes(hetero_ctrl):
+    with pytest.raises(ValueError, match="n_nodes"):
+        hetero_ctrl.solve_batched(jnp.zeros((2, N_GAME + 1)), 1.0)
+    with pytest.raises(TypeError, match="solver_kwargs"):
+        hetero_ctrl.solve_batched(0.0, jnp.asarray([1.0, 2.0]),
+                                  mode="ne", damping=0.5)

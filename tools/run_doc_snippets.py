@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Execute every fenced ``python`` snippet in Markdown docs — so docs can't rot.
+
+Walks the given Markdown files (default: ``docs/*.md`` and ``README.md``),
+extracts fenced code blocks whose info string starts with ``python``, and
+``exec``-utes them **per file in one shared namespace**, in order — later
+snippets may build on names defined by earlier ones, exactly as a reader
+would type them into one REPL session.
+
+Opt-outs:
+
+* fences tagged ``python no-run`` are skipped (use sparingly — e.g. for
+  pseudo-code signatures);
+* non-python fences (``bash``, ASCII diagrams, …) are ignored.
+
+Any exception fails the run with the offending ``file:line`` so CI (the
+``docs`` job in ``.github/workflows/ci.yml``) pins every published snippet
+to the real API.
+
+Run:  PYTHONPATH=src python tools/run_doc_snippets.py [files...]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+import traceback
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def extract_snippets(path: pathlib.Path) -> list[tuple[int, str]]:
+    """(first_code_lineno, code) for each runnable ```python fence."""
+    snippets: list[tuple[int, str]] = []
+    lines = path.read_text().splitlines()
+    cur: list[str] | None = None
+    info = ""
+    start = 0
+    for i, line in enumerate(lines, 1):
+        stripped = line.strip()
+        if cur is None and stripped.startswith("```") and stripped != "```":
+            info = stripped[3:].strip().lower()
+            cur, start = [], i + 1
+        elif cur is not None and stripped == "```":
+            if info.split() and info.split()[0] == "python" \
+                    and "no-run" not in info:
+                snippets.append((start, "\n".join(cur)))
+            cur = None
+        elif cur is not None:
+            cur.append(line)
+    if cur is not None:
+        raise SystemExit(f"{path}: unterminated code fence at line {start}")
+    return snippets
+
+
+def run_file(path: pathlib.Path) -> tuple[int, bool]:
+    """Execute the file's snippets in one namespace; (count, ok)."""
+    snippets = extract_snippets(path)
+    if not snippets:
+        print(f"-- {path}: no runnable python snippets")
+        return 0, True
+    ns: dict = {"__name__": f"__doc_snippet__[{path.name}]"}
+    for lineno, code in snippets:
+        # pad so tracebacks report real line numbers within the .md file
+        src = "\n" * (lineno - 1) + code
+        t0 = time.time()
+        try:
+            exec(compile(src, str(path), "exec"), ns)
+        except Exception:
+            print(f"FAIL {path}:{lineno}")
+            traceback.print_exc()
+            return len(snippets), False
+        print(f"  ok {path}:{lineno}  ({time.time() - t0:.1f}s)", flush=True)
+    return len(snippets), True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", type=pathlib.Path,
+                    help="Markdown files (default: docs/*.md + README.md)")
+    args = ap.parse_args()
+    files = args.files or [*sorted((REPO / "docs").glob("*.md")),
+                           REPO / "README.md"]
+
+    total, t0, ok = 0, time.time(), True
+    for path in files:
+        n, file_ok = run_file(path)
+        total += n
+        ok = ok and file_ok
+        if not file_ok:
+            break
+    status = "PASS" if ok else "FAIL"
+    print(f"{status}: {total} snippets across {len(files)} file(s) "
+          f"in {time.time() - t0:.1f}s")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
