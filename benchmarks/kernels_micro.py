@@ -1,20 +1,47 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks: every Pallas kernel vs its jnp reference.
 
 CPU wall times of interpret-mode Pallas are NOT TPU projections — they
 validate the harness and catch pathological regressions; the derived column
-carries the analytic arithmetic intensity that the TPU roofline uses.
+carries the analytic arithmetic intensity that the TPU roofline uses. Each
+kernel is timed on both backends of the dispatch layer
+(``repro.kernels.ops``), so the emitted ``BENCH_kernels.json`` doubles as a
+record of which backend a deployment should pin where.
+
+Run:  PYTHONPATH=src:. python benchmarks/kernels_micro.py   # -> BENCH_kernels.json
+(also invoked by benchmarks/run.py and as a CI smoke step.)
 """
 from __future__ import annotations
+
+import argparse
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import record, time_fn
+from benchmarks.common import header, record, time_fn
 from repro.kernels import ref
-from repro.kernels.ops import attention, fedavg, rwkv6, ssm
+from repro.kernels.ops import (attention, cross_entropy, fedavg, poibin,
+                               rwkv6, ssm)
 
 
-def run_all():
+def run_all() -> dict[str, dict]:
+    """Time every kernel (pallas-interpret + ref backends); return the
+    results keyed by kernel name for the JSON artifact."""
+    results: dict[str, dict] = {}
+
+    def bench(name: str, pallas_fn, ref_fn, derived) -> None:
+        """``derived`` is the label string, or a callable of the measured
+        microseconds (for bandwidth-style labels) so nothing is timed
+        twice just to format it."""
+        us = time_fn(pallas_fn)
+        label = derived(us) if callable(derived) else derived
+        record(f"kernel_{name}", us, f"{label} (interpret)")
+        us_ref = time_fn(ref_fn)
+        record(f"kernel_{name}_ref", us_ref, "pure-jnp reference backend")
+        results[name] = {"pallas_interpret_us": round(us, 1),
+                         "ref_us": round(us_ref, 1), "derived": label}
+
     key = jax.random.PRNGKey(0)
 
     b, s, h, d = 1, 256, 4, 64
@@ -22,13 +49,12 @@ def run_all():
     q = jax.random.normal(ks[0], (b, s, h, d))
     k = jax.random.normal(ks[1], (b, s, h, d))
     v = jax.random.normal(ks[2], (b, s, h, d))
-    us = time_fn(lambda: attention(q, k, v, block_q=64, block_k=64))
     flops = 4 * b * h * s * s * d / 2  # causal
     bytes_ = (3 * q.size + q.size) * 4
-    record("kernel_flash_attention", us,
-           f"AI={flops/bytes_:.1f} flop/byte (causal {s}x{s}, interpret)")
-    us_ref = time_fn(lambda: ref.flash_attention_ref(q, k, v))
-    record("kernel_flash_attention_ref", us_ref, "pure-jnp oracle")
+    bench("flash_attention",
+          lambda: attention(q, k, v, block_q=64, block_k=64),
+          lambda: attention(q, k, v, backend="ref"),
+          f"AI={flops/bytes_:.1f} flop/byte (causal {s}x{s})")
 
     b, s, h, d = 1, 128, 2, 64
     ks = jax.random.split(key, 5)
@@ -37,11 +63,10 @@ def run_all():
     vv = jax.random.normal(ks[2], (b, s, h, d)) * 0.5
     w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, d))) * 0.5 + 0.45
     u = jax.random.normal(ks[4], (h, d)) * 0.1
-    us = time_fn(lambda: rwkv6(r, kk, vv, w, u, block_t=64))
-    record("kernel_rwkv6_scan", us,
-           f"state={d}x{d} fp32/head, {s} steps (interpret)")
-    us_ref = time_fn(lambda: ref.rwkv6_scan_ref(r, kk, vv, w, u))
-    record("kernel_rwkv6_scan_ref", us_ref, "pure-jnp oracle")
+    bench("rwkv6_scan",
+          lambda: rwkv6(r, kk, vv, w, u, block_t=64),
+          lambda: rwkv6(r, kk, vv, w, u, backend="ref"),
+          f"state={d}x{d} fp32/head, {s} steps")
 
     bsz, sl, din, n = 1, 128, 64, 16
     ks = jax.random.split(key, 6)
@@ -51,27 +76,62 @@ def run_all():
     bb = jax.random.normal(ks[3], (bsz, sl, n))
     cc = jax.random.normal(ks[4], (bsz, sl, n))
     dsk = jax.random.normal(ks[5], (din,))
-    us = time_fn(lambda: ssm(x, delta, a_log, bb, cc, dsk, block_t=64,
-                             block_d=64))
-    record("kernel_ssm_scan", us, f"state={din}x{n} fp32 (interpret)")
+    bench("ssm_scan",
+          lambda: ssm(x, delta, a_log, bb, cc, dsk, block_t=64, block_d=64),
+          lambda: ssm(x, delta, a_log, bb, cc, dsk, backend="ref"),
+          f"state={din}x{n} fp32")
 
     t, d, v = 128, 64, 2048
     ks = jax.random.split(key, 3)
-    h = jax.random.normal(ks[0], (t, d))
+    hh = jax.random.normal(ks[0], (t, d))
     wv = jax.random.normal(ks[1], (d, v)) * d ** -0.5
     lab = jax.random.randint(ks[2], (t,), 0, v)
-    from repro.kernels.ops import cross_entropy
-    us = time_fn(lambda: cross_entropy(h, wv, lab, block_t=64, block_v=512))
     saved = t * v * 4
-    record("kernel_fused_ce", us,
-           f"avoids {saved/1e6:.1f} MB logits materialization (interpret)")
+    bench("fused_ce",
+          lambda: cross_entropy(hh, wv, lab, block_t=64, block_v=512),
+          lambda: cross_entropy(hh, wv, lab, backend="ref"),
+          f"avoids {saved/1e6:.1f} MB logits materialization")
 
     n_cl, p = 50, 1 << 16
     ks = jax.random.split(key, 3)
     g = jax.random.normal(ks[0], (p,))
     cf = jax.random.normal(ks[1], (n_cl, p))
     mask = jax.random.bernoulli(ks[2], 0.5, (n_cl,))
-    us = time_fn(lambda: fedavg(g, cf, mask))
-    gbps = (cf.size + g.size) * 4 / (us * 1e-6) / 1e9
-    record("kernel_fedavg_agg", us,
-           f"{n_cl}x{p} merge, {gbps:.2f} GB/s effective (interpret)")
+    bytes_moved = (cf.size + g.size) * 4
+    bench("fedavg_agg",
+          lambda: fedavg(g, cf, mask),
+          lambda: fedavg(g, cf, mask, backend="ref"),
+          lambda us: (f"{n_cl}x{p} merge, "
+                      f"{bytes_moved / (us * 1e-6) / 1e9:.2f} GB/s "
+                      f"effective"))
+
+    # the NE-engine hot path: pmf + all leave-one-out pmfs for a (B, N) batch
+    b_sc, n_nodes = 64, 50
+    p_mat = jax.random.uniform(jax.random.PRNGKey(9), (b_sc, n_nodes))
+    bench("poibin_dft",
+          lambda: poibin(p_mat),
+          lambda: poibin(p_mat, backend="ref"),
+          f"{b_sc}x{n_nodes} scenarios: DFT pmf + {n_nodes} loo deconvs each")
+
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    header()
+    results = run_all()
+    payload = {
+        "backend_default": "pallas (interpret on CPU; compiled on TPU)",
+        "note": "interpret-mode wall times validate the harness, they are "
+                "not TPU projections; ref_us is the pure-jnp backend "
+                "(`backend='ref'` / REPRO_KERNEL_BACKEND=ref)",
+        "kernels": results,
+    }
+    pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"\n{len(results)} kernels -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

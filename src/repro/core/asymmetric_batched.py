@@ -34,6 +34,17 @@ scenarios:
 Everything is written single-scenario and lifted with ``vmap`` in the jitted
 wrappers, so a ≥500-scenario (costs, gammas, dur) sweep at N=50 is one XLA
 dispatch (see ``benchmarks/heterogeneous_sweep.py``).
+
+The batch-parallel surfaces (:func:`verify_equilibrium_batched`,
+:func:`social_cost_batched`, and :func:`poa_report` through them) also
+dispatch their Poisson-binomial work through the kernel layer: pass
+``backend="pallas"`` to evaluate the whole batch's pmfs + leave-one-out
+deconvolutions in the fused :mod:`repro.kernels.poibin_dft` kernel (fp32,
+parity to ~1e-6). The default ``"ref"`` keeps the pre-existing vmapped jnp
+programs bitwise-unchanged. The Gauss-Seidel NE solve itself stays jnp:
+its per-node sweep is sequential (each deconvolution uses the profile
+updated by the previous node), which is not the kernel's batch-parallel
+shape.
 """
 from __future__ import annotations
 
@@ -45,7 +56,8 @@ import jax.numpy as jnp
 
 from repro.core.aoi import log_aoi
 from repro.core.duration import DurationModel
-from repro.core.poibin import (poibin_convolve, poibin_pmf_loo,
+from repro.core.poibin import (poibin_convolve, poibin_pmf_batched,
+                               poibin_pmf_loo, poibin_pmf_loo_all,
                                poibin_pmf_recursive)
 
 __all__ = [
@@ -251,6 +263,25 @@ def _verify_vmapped(costs, gammas, d_tab, p, *, grid):
         costs, gammas, d_tab, p)
 
 
+@functools.partial(jax.jit, static_argnames=("grid",))
+def _verify_vmapped_pallas(costs, gammas, d_tab, p, *, grid):
+    """Kernel-path certifier: one fused poibin program for the whole batch,
+    then the same broadcast deviation-utility table as :func:`_verify_one`
+    with a leading batch axis."""
+    _, loo = poibin_pmf_loo_all(p, backend="pallas")      # (B,S), (B,N,S)
+    dd = d_tab[:, 1:] - d_tab[:, :-1]
+    base = jnp.einsum("bns,bs->bn", loo[:, :, :-1], d_tab[:, :-1])
+    slope = jnp.einsum("bns,bs->bn", loo[:, :, :-1], dd)
+    gridv = jnp.linspace(P_MIN, 1.0, grid).astype(p.dtype)
+    aoi_dev = log_aoi(gridv)
+    u_dev = (-(base[..., None] + gridv[None, None, :] * slope[..., None])
+             - gammas[..., None] * aoi_dev[None, None, :]
+             - costs[..., None] * gridv[None, None, :])   # (B, N, G)
+    u_eq = (-(base + p * slope) - gammas * log_aoi(p) - costs * p)  # (B, N)
+    return jnp.maximum(
+        jnp.max(u_dev - u_eq[..., None], axis=(1, 2)), 0.0)
+
+
 def verify_equilibrium_batched(
     costs: jax.Array,
     gammas: jax.Array,
@@ -258,6 +289,7 @@ def verify_equilibrium_batched(
     p: jax.Array,
     *,
     grid: int = 64,
+    backend: str | None = None,
 ) -> jax.Array:
     """Max profitable unilateral deviation per scenario (0 at an exact NE).
 
@@ -265,8 +297,17 @@ def verify_equilibrium_batched(
     then an (N, grid) deviation-utility table per scenario — no Python loops.
     Accepts the same single-game / batched shapes as
     :func:`solve_heterogeneous`; returns ``(B,)``.
+
+    ``backend="pallas"`` computes the pmf/leave-one-out block in the fused
+    :mod:`repro.kernels.poibin_dft` kernel (fp32 parity); the default
+    ``"ref"`` is the bitwise-unchanged vmapped jnp program.
     """
     costs, gammas, d_tab, p = _prepare_batch(costs, gammas, dur, p)
+    from repro.kernels import ops as kernel_ops  # lazy: keep core light
+
+    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+        return _verify_vmapped_pallas(costs, gammas, d_tab, p,
+                                      grid=int(grid))
     return _verify_vmapped(costs, gammas, d_tab, p, grid=int(grid))
 
 
@@ -285,10 +326,27 @@ def _social_cost_vmapped(costs, d_tab, p):
     return jax.vmap(_social_cost_one)(costs, d_tab, p)
 
 
+@jax.jit
+def _social_cost_vmapped_pallas(costs, d_tab, p):
+    f = poibin_pmf_batched(p, backend="pallas")           # (B, S)
+    n = costs.shape[1]
+    return n * jnp.sum(f * d_tab, axis=1) + jnp.sum(costs * p, axis=1)
+
+
 def social_cost_batched(costs: jax.Array, dur: DurationModel | jax.Array,
-                        p: jax.Array) -> jax.Array:
-    """``Σ_i (E[D] + c_i p_i) = N·E[D] + Σ c_i p_i`` per scenario, ``(B,)``."""
+                        p: jax.Array, *,
+                        backend: str | None = None) -> jax.Array:
+    """``Σ_i (E[D] + c_i p_i) = N·E[D] + Σ c_i p_i`` per scenario, ``(B,)``.
+
+    ``backend="pallas"`` evaluates the batch's pmfs in the DFT kernel;
+    the default ``"ref"`` keeps the vmapped convolution-recursion program
+    bitwise-unchanged.
+    """
     costs, _, d_tab, p = _prepare_batch(costs, jnp.zeros_like(costs), dur, p)
+    from repro.kernels import ops as kernel_ops  # lazy: keep core light
+
+    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+        return _social_cost_vmapped_pallas(costs, d_tab, p)
     return _social_cost_vmapped(costs, d_tab, p)
 
 
@@ -374,15 +432,22 @@ def poa_report(
     *,
     verify_grid: int = 64,
     planner_rounds: int = 20,
+    backend: str | None = None,
     **solver_kwargs,
 ) -> HeterogeneousPoA:
-    """Solve, certify, and benchmark a batch of heterogeneous scenarios."""
+    """Solve, certify, and benchmark a batch of heterogeneous scenarios.
+
+    ``backend`` routes the certification and social-cost evaluations
+    through :mod:`repro.kernels.poibin_dft` when ``"pallas"`` (the NE
+    solve and planner stay jnp — their sweeps are sequential per node);
+    the default ``"ref"`` is bitwise-unchanged.
+    """
     sol = solve_heterogeneous(costs, gammas, dur, **solver_kwargs)
     dev = verify_equilibrium_batched(sol.costs, sol.gammas, dur, sol.p,
-                                     grid=verify_grid)
-    ne_cost = social_cost_batched(sol.costs, dur, sol.p)
+                                     grid=verify_grid, backend=backend)
+    ne_cost = social_cost_batched(sol.costs, dur, sol.p, backend=backend)
     opt_p = planner_batched(sol.costs, dur, sol.p, rounds=planner_rounds)
-    opt_cost = social_cost_batched(sol.costs, dur, opt_p)
+    opt_cost = social_cost_batched(sol.costs, dur, opt_p, backend=backend)
     poa = ne_cost / jnp.maximum(opt_cost, 1e-12)
     return HeterogeneousPoA(solution=sol, deviation=dev, ne_cost=ne_cost,
                             opt_p=opt_p, opt_cost=opt_cost, poa=poa)

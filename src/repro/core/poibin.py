@@ -4,9 +4,18 @@ Paper eq. (9): closed-form DFT expression for the pmf of ``m = sum_i X_i``
 with independent ``X_i ~ Bernoulli(p_i)`` (Fernandez & Williams, 2010), and
 eq. (8): the expected task duration ``E[D] = sum_k d(k) P[m=k]``.
 
-Everything is pure JAX (complex64/complex128 DFT) and differentiable in the
-participation probabilities — the NE solver in :mod:`repro.core.game`
-differentiates straight through this pmf.
+Everything scalar here is pure JAX (complex64/complex128 DFT) and
+differentiable in the participation probabilities — the NE solver in
+:mod:`repro.core.game` differentiates straight through this pmf.
+
+The *batched* entry points (:func:`poibin_pmf_batched`,
+:func:`poibin_pmf_loo_all`) additionally dispatch through the kernel layer
+(:mod:`repro.kernels.poibin_dft` via ``repro.kernels.ops``): pass
+``backend="pallas"`` — or set ``REPRO_KERNEL_BACKEND=pallas`` — to fuse a
+whole (B, N) scenario batch into one Pallas program. The kernel path is
+fp32 and **not differentiable**; the default ``"ref"`` backend keeps the
+pure-jnp vmapped math (bitwise-identical to calling the scalar functions
+under ``jax.vmap`` yourself).
 """
 from __future__ import annotations
 
@@ -18,6 +27,8 @@ __all__ = [
     "poibin_pmf_recursive",
     "poibin_convolve",
     "poibin_pmf_loo",
+    "poibin_pmf_batched",
+    "poibin_pmf_loo_all",
     "poibin_mean",
     "poibin_cdf",
     "expected_duration",
@@ -131,6 +142,43 @@ def poibin_pmf_loo(pmf: jax.Array, p_i: jax.Array) -> jax.Array:
 
     g = jnp.where(use_fwd, g_fwd, g_bwd)
     return jnp.concatenate([g, jnp.zeros((1,), pmf.dtype)])
+
+
+def poibin_pmf_batched(p: jax.Array, *, backend: str | None = None
+                       ) -> jax.Array:
+    """Pmfs of a whole ``(B, N)`` probability-matrix batch, ``(B, N+1)``.
+
+    ``backend="pallas"`` runs the batched DFT kernel
+    (:mod:`repro.kernels.poibin_dft`, fp32, one program for the batch);
+    the default ``"ref"`` is exactly ``jax.vmap(poibin_pmf)`` (float64
+    under x64, differentiable).
+    """
+    from repro.kernels import ops as kernel_ops  # lazy: keep core light
+
+    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+        return kernel_ops.poibin_pmf(p, backend="pallas")
+    return jax.vmap(poibin_pmf)(p)
+
+
+def poibin_pmf_loo_all(p: jax.Array, *, backend: str | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """All leave-one-out pmfs of a ``(B, N)`` batch in one pass.
+
+    Returns ``(pmf (B, N+1), loo (B, N, N+1))`` where ``loo[b, i]`` is the
+    pmf of scenario b's nodes excluding node i. ``backend="pallas"`` fuses
+    DFT pmf + N deconvolutions per scenario into one kernel; the default
+    ``"ref"`` builds the pmf with the stable convolution recursion and
+    deconvolves it (``vmap``-ed :func:`poibin_pmf_loo`) — the exact op
+    sequence of the heterogeneous-game certifier, kept as its bitwise
+    oracle.
+    """
+    from repro.kernels import ops as kernel_ops  # lazy: keep core light
+
+    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+        return kernel_ops.poibin(p, backend="pallas")
+    pmf = jax.vmap(poibin_pmf_recursive)(p)
+    loo = jax.vmap(jax.vmap(poibin_pmf_loo, in_axes=(None, 0)))(pmf, p)
+    return pmf, loo
 
 
 def poibin_mean(p: jax.Array) -> jax.Array:

@@ -40,6 +40,11 @@ and stratified-fleet sweeps compile to one jitted program and run orders of
 magnitude faster than looping the per-node Python reference
 (:func:`repro.federated.simulation.run_heterogeneous_reference`).
 
+The round's FedAvg merge dispatches through the kernel layer:
+``backend="pallas"`` routes it to the fused Pallas merge kernel
+(:mod:`repro.kernels.fedavg_agg`), the default ``"ref"`` keeps the pure-jnp
+merge and its bitwise-reproducible results — see ``docs/kernels.md``.
+
 See ``docs/architecture.md`` for the layer diagram and the scan-carry /
 reference-oracle conventions, and ``docs/api.md`` for runnable snippets.
 """
@@ -166,6 +171,7 @@ def build_campaign(
     opt: Optimizer,
     *,
     churn: bool = False,
+    backend: str | None = None,
 ):
     """Compile the campaign engine for one task definition.
 
@@ -173,7 +179,14 @@ def build_campaign(
     an :class:`~repro.federated.simulation.FLConfig` (``max_rounds`` fixes
     the static scan length). ``churn`` is a *static* flag: the churn-free
     program is built without any presence logic, so it stays instruction-
-    identical to the symmetric engine.
+    identical to the symmetric engine. ``backend`` is likewise static and
+    picks the FedAvg-merge implementation baked into the program:
+    ``"ref"`` (the pure-jnp merge — with ``backend=None`` and no
+    env/``set_backend`` override this is the default, keeping results
+    bitwise-identical to the dispatch-free engine) or ``"pallas"`` (the
+    fused :mod:`repro.kernels.fedavg_agg` kernel, vmapped over the
+    scenario batch as an extra grid dimension; parity to tolerance, see
+    ``tests/test_kernels.py``).
 
     Returns a jitted engine:
 
@@ -243,7 +256,8 @@ def build_campaign(
             mask, client_params = train_round(params, p_vec, rng, r)
             if churn:
                 mask = mask & here               # absentees cannot join
-            merged = fedavg_merge(params, client_params, mask)
+            merged = fedavg_merge(params, client_params, mask,
+                                  backend=backend)
             acc = eval_fn(merged, val_batch)
 
             new_acc = jnp.where(active, acc, last_acc)
@@ -337,6 +351,7 @@ def run_campaigns(
     churn: ChurnConfig | None = None,
     seeds: Sequence[int] | jax.Array | None = None,
     engine: Callable | None = None,
+    backend: str | None = None,
 ) -> CampaignResult:
     """Run B FedAvg campaigns as one jitted scan+vmap program.
 
@@ -363,7 +378,11 @@ def run_campaigns(
             sweeping repeatedly over one task so the XLA compile is paid
             once (a fresh engine is built — and traced — per call
             otherwise). Must have been built with ``churn=True`` iff
-            ``churn`` is passed here.
+            ``churn`` is passed here; a prebuilt engine also bakes in its
+            own ``backend``, ignoring this call's.
+        backend: FedAvg-merge implementation, ``"ref"`` (default —
+            bitwise-stable jnp path) or ``"pallas"`` (fused kernel); see
+            :func:`build_campaign`.
 
     Returns:
         A :class:`CampaignResult`; per-node realized splits live in
@@ -392,7 +411,7 @@ def run_campaigns(
 
     fn = engine if engine is not None else build_campaign(
         fl, init_params, loss_fn, eval_fn, client_data, val_batch, opt,
-        churn=churn is not None)
+        churn=churn is not None, backend=backend)
     if churn is not None:
         arrival, departure, present0 = churn.as_arrays(batch, n)
         out = fn(p_arr, seeds, e_part, e_idle, arrival, departure, present0)

@@ -6,8 +6,11 @@ participating subset. If nobody participates the global model is unchanged
 (the round is wasted — exactly the energy/duration penalty the game studies).
 
 ``fedavg_merge`` operates on *stacked* client params (leading client axis) so
-it runs as one fused XLA op per leaf — and has a Pallas twin
-(:mod:`repro.kernels.fedavg_agg`) for the TPU hot path.
+it runs as one fused XLA op per leaf — and dispatches to its Pallas twin
+(:mod:`repro.kernels.fedavg_agg` via ``ops.fedavg_merge_pallas``) when the
+kernel backend is selected (``backend="pallas"``, ``ops.set_backend``, or
+``REPRO_KERNEL_BACKEND=pallas``; the default ``"ref"`` keeps the pure-jnp
+path and its bitwise-reproducible results).
 """
 from __future__ import annotations
 
@@ -21,7 +24,8 @@ __all__ = ["fedavg_merge", "ConvergenceTracker"]
 
 
 def fedavg_merge(global_params, client_params, mask: jax.Array,
-                 weights: jax.Array | None = None):
+                 weights: jax.Array | None = None, *,
+                 backend: str | None = None):
     """Masked (weighted) average of stacked client params.
 
     Args:
@@ -29,7 +33,17 @@ def fedavg_merge(global_params, client_params, mask: jax.Array,
         client_params: same pytree with leading client axis N.
         mask: (N,) bool/0-1 participation.
         weights: optional (N,) data-size weights (paper: equal shards).
+        backend: ``"ref"`` (default; pure-jnp per-leaf merge, bitwise
+            stable) or ``"pallas"`` (flatten-once fused kernel, fp32
+            round-trip — parity to tolerance). ``None`` resolves through
+            :func:`repro.kernels.ops.resolve_backend` at trace time.
     """
+    from repro.kernels import ops as kernel_ops  # lazy: keep imports light
+
+    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+        m = mask if weights is None \
+            else mask.astype(jnp.float32) * weights.astype(jnp.float32)
+        return kernel_ops.fedavg_merge_pallas(global_params, client_params, m)
     m = mask.astype(jnp.float32)
     if weights is not None:
         m = m * weights.astype(jnp.float32)

@@ -5,8 +5,15 @@ rwkv6_scan      — WKV6 recurrence with data-dependent decay
 ssm_scan        — Mamba-style selective scan (Hymba's SSM branch)
 fedavg_agg      — fused participation-masked FedAvg parameter merge
 fused_ce        — cross-entropy via streamed vocab tiles (no (T,V) logits)
+poibin_dft      — batched Poisson-Binomial DFT pmf + leave-one-out deconv
 
-Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
-``ops.py`` (interpret=True on CPU, compiled on TPU).
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
+in ``ops.py`` (interpret=True on CPU, compiled on TPU). ``ops`` is also the
+backend dispatch layer: every wrapper takes ``backend="pallas"|"ref"``,
+overridable process-wide via ``ops.set_backend``/``ops.backend_scope`` or
+the ``REPRO_KERNEL_BACKEND`` environment variable, and the campaign/game
+hot loops (``repro.federated.server.fedavg_merge``,
+``repro.core.asymmetric_batched``) route through it — see
+``docs/kernels.md`` for the catalog.
 """
 from repro.kernels import ops, ref

@@ -1,0 +1,15 @@
+"""Version shims for the Pallas TPU API surface the kernels rely on.
+
+The Mosaic compiler-params dataclass was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); every kernel
+module imports :data:`CompilerParams` from here so the whole layer tracks
+whichever name the installed JAX provides.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

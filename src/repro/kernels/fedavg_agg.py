@@ -9,7 +9,14 @@ fallback into one pass reads each client parameter exactly once.
   previous-global slice. N ≤ ~64 clients and BP = 2048 fp32 keeps tiles
   ~0.5 MB in VMEM.
 * The mask lives in SMEM-friendly (N, 1) layout; participant count is
-  reduced in-kernel (N is tiny).
+  reduced in-kernel (N is tiny). Float masks carry participation·weight
+  products for the weighted-FedAvg path.
+* Ragged P is padded up to a ``block_p`` multiple in the wrapper and
+  sliced back off; N = 1 degenerates to a copy-or-fallback and the
+  all-zero mask returns the previous global exactly.
+* dtype policy: fp32 accumulate regardless of input dtype; output in
+  ``global_flat.dtype`` (f64 campaign params round-trip through fp32 —
+  the pallas backend is parity-to-tolerance, not bitwise).
 
 Oracle: :func:`repro.kernels.ref.fedavg_agg_ref`.
 """
@@ -20,7 +27,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(global_ref, clients_ref, mask_ref, o_ref):
@@ -55,7 +64,7 @@ def fedavg_agg(global_flat, client_flat, mask, *, block_p: int = 2048,
         ],
         out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_p * block_p,), global_flat.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(global_flat, client_flat, mask2)

@@ -24,7 +24,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import CompilerParams
 
 NEG_INF = -1e30
 
@@ -106,7 +108,7 @@ def fused_ce(hidden, w_vocab, labels, *, block_t: int = 128,
             pltpu.VMEM((block_t,), jnp.float32),
             pltpu.VMEM((block_t,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(hidden, w_vocab, labels.astype(jnp.int32))

@@ -1,13 +1,36 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd wrappers + backend dispatch for the Pallas kernels.
 
-On TPU the kernels run compiled; on this CPU container they run in
-``interpret=True`` mode (the kernel body executes step-by-step in Python/XLA,
-validating the exact TPU program logic). ``use_pallas()`` reports whether the
-model layer should route through these or the pure-jnp references.
+Every kernel has two interchangeable implementations:
+
+* ``backend="pallas"`` — the Pallas TPU kernel. On TPU it runs compiled; on
+  this CPU container it runs in ``interpret=True`` mode (the kernel body
+  executes step-by-step in Python/XLA, validating the exact TPU program
+  logic). Held to the jnp references to tight tolerance in
+  ``tests/test_kernels.py`` / ``tests/test_property_poibin.py``.
+* ``backend="ref"`` — the pure-jnp oracle (:mod:`repro.kernels.ref`), or at
+  higher-level call sites (``repro.federated.server.fedavg_merge``,
+  ``repro.core.asymmetric_batched``) the pre-existing jnp code path, which
+  stays **bitwise** identical to the dispatch-free behaviour.
+
+Backend resolution order (first hit wins):
+
+1. the explicit ``backend=`` argument of the call,
+2. a process-wide override installed with :func:`set_backend` (or
+   temporarily via the :func:`backend_scope` context manager),
+3. the ``REPRO_KERNEL_BACKEND`` environment variable,
+4. the call site's default — ``"pallas"`` for the model kernels below
+   (attention / rwkv6 / ssm / cross_entropy / fedavg / poibin wrappers),
+   ``"ref"`` for the campaign and game hot loops so their results stay
+   bitwise-reproducible unless a kernel backend is asked for.
+
+Resolution happens at **trace time**: a jitted program (e.g. a prebuilt
+``build_campaign`` engine) bakes in whatever backend was resolved when it
+was traced, and later ``set_backend``/env changes do not retrace it.
 """
 from __future__ import annotations
 
-import functools
+import contextlib
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,48 +39,156 @@ from repro.kernels import ref
 from repro.kernels.fedavg_agg import fedavg_agg as _fedavg_pallas
 from repro.kernels.fused_ce import fused_ce as _fused_ce_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.poibin_dft import poibin_dft as _poibin_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6_pallas
 from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
 
-__all__ = ["attention", "rwkv6", "ssm", "fedavg", "cross_entropy",
-           "use_pallas", "fedavg_merge_pallas"]
+__all__ = ["BACKENDS", "ENV_VAR", "resolve_backend", "set_backend",
+           "backend_scope", "use_pallas",
+           "attention", "rwkv6", "ssm", "fedavg", "cross_entropy",
+           "fedavg_merge_pallas", "poibin", "poibin_pmf"]
+
+BACKENDS = ("pallas", "ref")
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_override: str | None = None   # set_backend() state; beats the env var
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def use_pallas() -> bool:
-    """Pallas path is always available (interpret on CPU); models opt in."""
-    return True
+def _validate(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    return backend
 
+
+def resolve_backend(backend: str | None = None, *,
+                    default: str = "pallas") -> str:
+    """Resolve a ``backend=`` argument to ``"pallas"`` or ``"ref"``.
+
+    Precedence: explicit argument > :func:`set_backend` override >
+    ``REPRO_KERNEL_BACKEND`` env var > ``default`` (the call site's own
+    default — ``"pallas"`` for kernel wrappers, ``"ref"`` for the
+    bitwise-reproducible campaign/game hot loops).
+    """
+    if backend is not None:
+        return _validate(backend)
+    if _override is not None:
+        return _override
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return _validate(env)
+    return _validate(default)
+
+
+def set_backend(backend: str | None) -> str | None:
+    """Install a process-wide backend override (``None`` clears it).
+
+    Returns the previous override so callers can restore it; prefer
+    :func:`backend_scope` for temporary pinning. Only affects programs
+    traced *after* the call (see module docstring).
+    """
+    global _override
+    prev = _override
+    _override = None if backend is None else _validate(backend)
+    return prev
+
+
+@contextlib.contextmanager
+def backend_scope(backend: str):
+    """Context manager pinning every dispatched call inside to ``backend``."""
+    prev = set_backend(backend)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def use_pallas() -> bool:
+    """Whether dispatched calls currently resolve to the Pallas kernels.
+
+    The kernels themselves are always *available* (interpret mode on CPU);
+    this reports the outcome of :func:`resolve_backend` at its ``"pallas"``
+    default — i.e. ``False`` only when a ``set_backend``/env override pins
+    the process to the jnp references.
+    """
+    return resolve_backend() == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Model kernels (default backend: pallas)
+# ---------------------------------------------------------------------------
 
 def attention(q, k, v, *, causal: bool = True, window: int = 0,
-              block_q: int = 128, block_k: int = 128):
+              block_q: int = 128, block_k: int = 128,
+              backend: str | None = None):
+    """Flash attention. q: (B,S,H,D); k,v: (B,S,KV,D) -> (B,S,H,D)."""
+    if resolve_backend(backend) == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     return _flash_pallas(q, k, v, causal=causal, window=window,
                          block_q=block_q, block_k=block_k,
                          interpret=_interpret())
 
 
-def rwkv6(r, k, v, w, u, *, block_t: int = 256):
+def rwkv6(r, k, v, w, u, *, block_t: int = 256, backend: str | None = None):
+    """WKV6 recurrence. r,k,v,w: (B,S,H,D); u: (H,D) -> (out, state)."""
+    if resolve_backend(backend) == "ref":
+        return ref.rwkv6_scan_ref(r, k, v, w, u)
     return _rwkv6_pallas(r, k, v, w, u, block_t=block_t,
                          interpret=_interpret())
 
 
 def ssm(x, delta, a_log, b, c, d_skip, *, block_t: int = 256,
-        block_d: int = 512):
+        block_d: int = 512, backend: str | None = None):
+    """Mamba selective scan. x,delta: (B,S,Din) -> (y, h_final)."""
+    if resolve_backend(backend) == "ref":
+        return ref.ssm_scan_ref(x, delta, a_log, b, c, d_skip)
     return _ssm_pallas(x, delta, a_log, b, c, d_skip, block_t=block_t,
                        block_d=block_d, interpret=_interpret())
 
 
-def fedavg(global_flat, client_flat, mask, *, block_p: int = 2048):
+def cross_entropy(hidden, w_vocab, labels, *, block_t: int = 128,
+                  block_v: int = 512, backend: str | None = None):
+    """Fused per-token NLL without materializing (T, V) logits in HBM."""
+    if resolve_backend(backend) == "ref":
+        return ref.fused_ce_ref(hidden, w_vocab, labels)
+    return _fused_ce_pallas(hidden, w_vocab, labels, block_t=block_t,
+                            block_v=block_v, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# FedAvg merge (the campaign hot path)
+# ---------------------------------------------------------------------------
+
+def fedavg(global_flat, client_flat, mask, *, block_p: int = 2048,
+           backend: str | None = None):
+    """Masked FedAvg merge on flat params.
+
+    global_flat: (P,); client_flat: (N,P); mask: (N,) bool or float
+    (pre-scaled weights) -> (P,). Ragged P is padded to ``block_p`` inside
+    the kernel wrapper; N = 1 and the all-zero mask (previous-global
+    fallback) are supported.
+    """
+    if resolve_backend(backend) == "ref":
+        return ref.fedavg_agg_ref(global_flat, client_flat, mask)
     return _fedavg_pallas(global_flat, client_flat, mask, block_p=block_p,
                           interpret=_interpret())
 
 
-def fedavg_merge_pallas(global_params, client_params, mask):
-    """Drop-in replacement for federated.server.fedavg_merge: flattens the
-    pytree, runs the fused kernel, restores structure."""
+def fedavg_merge_pallas(global_params, client_params, mask, *,
+                        block_p: int = 2048):
+    """Pallas twin of :func:`repro.federated.server.fedavg_merge`.
+
+    Flattens the pytree **once** into a single (P,) global / (N, P) client
+    buffer (fp32), runs the fused kernel over ``block_p`` tiles, and
+    restores structure and per-leaf dtypes. Non-fp32 leaves (f64 params
+    under x64, bf16) round-trip through fp32 — the kernel dtype policy —
+    so this path is parity-tested to tolerance, not bitwise
+    (``tests/test_kernels.py``). Vmapping this over a scenario batch adds
+    a grid dimension to the kernel (the campaign engine's pallas path).
+    """
     g_leaves = jax.tree.leaves(global_params)
     c_leaves = jax.tree.leaves(client_params)
     sizes = [int(x.size) for x in g_leaves]
@@ -65,7 +196,7 @@ def fedavg_merge_pallas(global_params, client_params, mask):
                               for x in g_leaves])
     c_flat = jnp.concatenate([c.reshape(c.shape[0], -1).astype(jnp.float32)
                               for c in c_leaves], axis=1)
-    merged = fedavg(g_flat, c_flat, mask)
+    merged = fedavg(g_flat, c_flat, mask, block_p=block_p, backend="pallas")
     out, off = [], 0
     for g, size in zip(g_leaves, sizes):
         out.append(merged[off:off + size].reshape(g.shape).astype(g.dtype))
@@ -73,8 +204,32 @@ def fedavg_merge_pallas(global_params, client_params, mask):
     return jax.tree.unflatten(jax.tree.structure(global_params), out)
 
 
-def cross_entropy(hidden, w_vocab, labels, *, block_t: int = 128,
-                  block_v: int = 512):
-    """Fused per-token NLL without materializing (T, V) logits in HBM."""
-    return _fused_ce_pallas(hidden, w_vocab, labels, block_t=block_t,
-                            block_v=block_v, interpret=_interpret())
+# ---------------------------------------------------------------------------
+# Batched Poisson-Binomial (the NE-engine hot path)
+# ---------------------------------------------------------------------------
+
+def poibin(p_mat, *, block_b: int = 8, backend: str | None = None):
+    """DFT pmf + all leave-one-out pmfs for a (B, N) probability matrix.
+
+    Returns ``(pmf (B, N+1), loo (B, N, N+1))`` in ``p_mat``'s dtype;
+    ``loo[b, i]`` is the pmf of scenario b's nodes excluding node i (last
+    entry zero). Kernel arithmetic is fp32 (oracle:
+    :func:`repro.kernels.ref.poibin_dft_ref`); the ``"ref"`` backend runs
+    that oracle in the input dtype.
+    """
+    if resolve_backend(backend) == "ref":
+        return ref.poibin_dft_ref(p_mat)
+    return _poibin_pallas(p_mat, block_b=block_b, with_loo=True,
+                          interpret=_interpret())
+
+
+def poibin_pmf(p_mat, *, block_b: int = 8, backend: str | None = None):
+    """(B, N) probability matrix -> (B, N+1) Poisson-Binomial pmfs.
+
+    The pmf-only variant of :func:`poibin` (the leave-one-out pass is
+    skipped entirely — e.g. the social-cost evaluation only needs pmfs).
+    """
+    if resolve_backend(backend) == "ref":
+        return ref.poibin_dft_ref(p_mat, with_loo=False)
+    return _poibin_pallas(p_mat, block_b=block_b, with_loo=False,
+                          interpret=_interpret())

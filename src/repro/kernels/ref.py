@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["flash_attention_ref", "rwkv6_scan_ref", "ssm_scan_ref",
-           "fedavg_agg_ref", "fused_ce_ref"]
+           "fedavg_agg_ref", "fused_ce_ref", "poibin_dft_ref"]
 
 
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
@@ -39,6 +39,10 @@ def rwkv6_scan_ref(r, k, v, w, u, state=None):
 
     r,k,v,w: (B,S,H,D); u: (H,D); state: (B,H,D,D) or None.
     Returns (out (B,S,H,D), final_state fp32).
+
+    ``state`` is an oracle-only convenience for chunked-scan tests: the
+    Pallas kernel (and the ``ops.rwkv6`` wrapper) always starts from the
+    zero state and returns the final state for the caller to chain.
     """
     b, s, h, d = r.shape
     if state is None:
@@ -63,6 +67,9 @@ def ssm_scan_ref(x, delta, a_log, b, c, d_skip, h0=None):
 
     x, delta: (B,S,Din); a_log: (Din,N); b,c: (B,S,N); d_skip: (Din,);
     h0: (B,Din,N) or None. Returns (y (B,S,Din), h_final fp32).
+
+    Like ``rwkv6_scan_ref``, ``h0`` is oracle-only: the Pallas kernel and
+    the ``ops.ssm`` wrapper always start from the zero state.
     """
     bsz, s, d_in = x.shape
     n = a_log.shape[1]
@@ -88,7 +95,10 @@ def ssm_scan_ref(x, delta, a_log, b, c, d_skip, h0=None):
 def fedavg_agg_ref(global_flat, client_flat, mask):
     """Masked mean over the client axis with k=0 fallback.
 
-    global_flat: (P,); client_flat: (N,P); mask: (N,). fp32 accumulation.
+    global_flat: (P,); client_flat: (N,P); mask: (N,) bool 0/1
+    participation, or float participation·weight products (the weighted
+    FedAvg path — the math is the same Σmθ/Σm). fp32 accumulation; output
+    in ``global_flat.dtype``.
     """
     m = mask.astype(jnp.float32)
     total = jnp.sum(m)
@@ -96,6 +106,60 @@ def fedavg_agg_ref(global_flat, client_flat, mask):
         / jnp.maximum(total, 1e-9)
     return jnp.where(total > 0, avg,
                      global_flat.astype(jnp.float32)).astype(global_flat.dtype)
+
+
+def poibin_dft_ref(p_mat, with_loo: bool = True):
+    """Batched Poisson-Binomial DFT pmf + leave-one-out deconvolution.
+
+    p_mat: (B, N) probabilities in [0, 1]. Returns pmf (B, N+1) and — with
+    ``with_loo`` — loo (B, N, N+1) where ``loo[b, i]`` is the pmf of
+    scenario b's nodes excluding node i (support 0..N-1, last entry zero).
+
+    Same math as :func:`repro.core.poibin.poibin_pmf` (eq. (9) DFT with
+    clip + renormalize) and :func:`repro.core.poibin.poibin_pmf_loo`
+    (forward recursion for p ≤ 1/2, backward for p > 1/2), restated here
+    self-contained in the input dtype so the kernel layer stays
+    dependency-free; the three-way agreement (this oracle, the Pallas
+    kernel, the repro.core functions) is pinned in
+    ``tests/test_property_poibin.py``.
+    """
+    p_mat = jnp.asarray(p_mat)
+    _, n = p_mat.shape
+    size = n + 1
+    cdtype = jnp.complex64 if p_mat.dtype == jnp.float32 else jnp.complex128
+    idx = jnp.arange(size)
+    omega = jnp.exp(2j * jnp.pi * idx / size).astype(cdtype)   # (S,)
+    terms = p_mat[:, None, :] * (omega[None, :, None] - 1.0) + 1.0
+    chi = jnp.prod(terms, axis=2)                              # (B, S)
+    dft = jnp.exp(-2j * jnp.pi * jnp.outer(idx, idx) / size).astype(cdtype)
+    raw = jnp.clip((chi @ dft.T).real / size, 0.0, 1.0)
+    pmf = raw / jnp.sum(raw, axis=1, keepdims=True)
+    if not with_loo:
+        return pmf
+
+    def loo_one(f, p_i):
+        q_i = 1.0 - p_i
+        use_fwd = p_i <= 0.5
+        q_safe = jnp.where(use_fwd, q_i, 0.5)
+        p_safe = jnp.where(use_fwd, 0.5, p_i)
+
+        def fwd(g_prev, f_k):
+            g_k = (f_k - p_i * g_prev) / q_safe
+            return g_k, g_k
+
+        _, g_fwd = jax.lax.scan(fwd, jnp.zeros((), f.dtype), f[:-1])
+
+        def bwd(g_next, f_k1):
+            g_k = (f_k1 - q_i * g_next) / p_safe
+            return g_k, g_k
+
+        _, g_bwd = jax.lax.scan(bwd, jnp.zeros((), f.dtype), f[1:],
+                                reverse=True)
+        g = jnp.where(use_fwd, g_fwd, g_bwd)
+        return jnp.concatenate([g, jnp.zeros((1,), f.dtype)])
+
+    loo = jax.vmap(jax.vmap(loo_one, in_axes=(None, 0)))(pmf, p_mat)
+    return pmf, loo
 
 
 def fused_ce_ref(hidden, w_vocab, labels):

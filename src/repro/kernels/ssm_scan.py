@@ -21,7 +21,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, dskip_ref, y_ref, h_out_ref,
@@ -113,7 +115,7 @@ def ssm_scan(x, delta, a_log, b, c, d_skip, *, block_t: int = 256,
             jax.ShapeDtypeStruct((bsz, n_d * block_d, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, delta, a_log, b, c, d_skip)

@@ -1,0 +1,249 @@
+"""Backend dispatch (`repro.kernels.ops`) + hot-path wiring tests.
+
+The dispatch contract this file pins:
+
+* resolution precedence: explicit ``backend=`` > ``set_backend`` override >
+  ``REPRO_KERNEL_BACKEND`` env var > the call site's default;
+* ``backend="ref"`` at the campaign/game call sites is **bitwise** the
+  pre-dispatch behaviour (same program, not just close);
+* ``backend="pallas"`` (interpret mode on CPU) matches the references to
+  tight tolerance end to end — through ``fedavg_merge``, the campaign
+  engine, and the heterogeneous-game certifier/social cost.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.asymmetric_batched import (social_cost_batched,
+                                           solve_heterogeneous,
+                                           verify_equilibrium_batched)
+from repro.core.duration import theoretical_duration
+from repro.federated.campaign import run_campaigns
+from repro.federated.server import fedavg_merge
+from repro.federated.simulation import FLConfig
+from repro.federated.tasks import synthetic_mlp_task
+from repro.kernels import ops, ref
+from repro.optim import sgd
+
+
+@pytest.fixture(autouse=True)
+def _clean_backend_state(monkeypatch):
+    """Each test starts with no override and no env pin."""
+    monkeypatch.delenv(ops.ENV_VAR, raising=False)
+    ops.set_backend(None)
+    yield
+    ops.set_backend(None)
+
+
+# ---------------------------------------------------------------------------
+# resolution precedence
+# ---------------------------------------------------------------------------
+
+def test_resolution_defaults():
+    assert ops.resolve_backend() == "pallas"
+    assert ops.resolve_backend(default="ref") == "ref"
+    assert ops.use_pallas()
+
+
+def test_explicit_argument_wins(monkeypatch):
+    monkeypatch.setenv(ops.ENV_VAR, "ref")
+    ops.set_backend("ref")
+    assert ops.resolve_backend("pallas") == "pallas"
+
+
+def test_set_backend_beats_env(monkeypatch):
+    monkeypatch.setenv(ops.ENV_VAR, "pallas")
+    ops.set_backend("ref")
+    assert ops.resolve_backend() == "ref"
+    assert not ops.use_pallas()
+
+
+def test_env_beats_default(monkeypatch):
+    monkeypatch.setenv(ops.ENV_VAR, "ref")
+    assert ops.resolve_backend() == "ref"
+    assert ops.resolve_backend(default="pallas") == "ref"
+
+
+def test_backend_scope_restores():
+    prev = ops.set_backend("pallas")
+    assert prev is None
+    with ops.backend_scope("ref"):
+        assert ops.resolve_backend() == "ref"
+    assert ops.resolve_backend() == "pallas"
+
+
+def test_invalid_backend_rejected(monkeypatch):
+    with pytest.raises(ValueError):
+        ops.resolve_backend("mosaic")
+    with pytest.raises(ValueError):
+        ops.set_backend("tpu")
+    monkeypatch.setenv(ops.ENV_VAR, "bogus")
+    with pytest.raises(ValueError):
+        ops.resolve_backend()
+
+
+def test_model_wrappers_pin_to_reference():
+    """backend='ref' on a model-kernel wrapper returns the jnp oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (1, 64, 2, 32), jnp.float32)
+               for kk in ks)
+    got = ops.attention(q, k, v, backend="ref")
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# fedavg_merge dispatch
+# ---------------------------------------------------------------------------
+
+def _param_trees(n=4):
+    key = jax.random.PRNGKey(1)
+    g = {"w": jax.random.normal(key, (13, 7)),          # float64 under x64
+         "b": jnp.ones((5,), jnp.float32),
+         "h": jnp.ones((3,), jnp.bfloat16)}
+    c = jax.tree.map(lambda x: jnp.stack([x + i for i in range(n)]), g)
+    return g, c
+
+
+def test_fedavg_merge_ref_is_bitwise_default():
+    g, c = _param_trees()
+    mask = jnp.asarray([1, 0, 1, 1], bool)
+    default = fedavg_merge(g, c, mask)
+    explicit = fedavg_merge(g, c, mask, backend="ref")
+    for k in g:
+        np.testing.assert_array_equal(np.asarray(default[k], np.float32),
+                                      np.asarray(explicit[k], np.float32))
+
+
+def test_fedavg_merge_pallas_parity_mixed_dtypes():
+    g, c = _param_trees()
+    mask = jnp.asarray([1, 0, 1, 1], bool)
+    want = fedavg_merge(g, c, mask)
+    got = fedavg_merge(g, c, mask, backend="pallas")
+    for k in g:
+        assert got[k].dtype == g[k].dtype
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_fedavg_merge_pallas_weights():
+    g, c = _param_trees()
+    mask = jnp.asarray([1, 1, 0, 1], bool)
+    w = jnp.asarray([0.1, 2.0, 5.0, 0.7])
+    want = fedavg_merge(g, c, mask, w)
+    got = fedavg_merge(g, c, mask, w, backend="pallas")
+    for k in g:
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_fedavg_merge_pallas_single_client_and_empty_round():
+    g, c = _param_trees(n=1)
+    np.testing.assert_allclose(
+        np.asarray(fedavg_merge(g, c, jnp.ones((1,), bool),
+                                backend="pallas")["w"], np.float32),
+        np.asarray(c["w"][0], np.float32), atol=1e-6)
+    # all-zero mask: previous global wins, exactly
+    out = fedavg_merge(g, c, jnp.zeros((1,), bool), backend="pallas")
+    np.testing.assert_allclose(np.asarray(out["w"], np.float32),
+                               np.asarray(g["w"], np.float32), atol=1e-6)
+
+
+def test_fedavg_merge_env_pin(monkeypatch):
+    """REPRO_KERNEL_BACKEND=pallas flips the default-'ref' call site."""
+    g, c = _param_trees()
+    mask = jnp.asarray([0, 1, 1, 0], bool)
+    monkeypatch.setenv(ops.ENV_VAR, "pallas")
+    got = fedavg_merge(g, c, mask)
+    want = ops.fedavg_merge_pallas(g, c, mask)
+    for k in g:
+        np.testing.assert_array_equal(np.asarray(got[k], np.float32),
+                                      np.asarray(want[k], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# campaign engine dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_campaign():
+    task = synthetic_mlp_task()
+    fl = FLConfig(n_clients=5, local_steps=1, batch_per_client=8,
+                  max_rounds=8, target_acc=0.73, seed=3)
+    ps = jnp.asarray([0.35, 0.8], jnp.float32)
+    return task, fl, ps
+
+
+def test_campaign_backend_ref_bitwise(small_campaign):
+    task, fl, ps = small_campaign
+    res = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps)
+    res_ref = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                            backend="ref")
+    np.testing.assert_array_equal(np.asarray(res.acc_history),
+                                  np.asarray(res_ref.acc_history))
+    np.testing.assert_array_equal(np.asarray(res.ledger.per_node_j),
+                                  np.asarray(res_ref.ledger.per_node_j))
+
+
+def test_campaign_backend_pallas_parity(small_campaign):
+    task, fl, ps = small_campaign
+    res = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps)
+    res_pal = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                            backend="pallas")
+    # RNG streams untouched by the merge backend: masks/ledger identical
+    np.testing.assert_array_equal(np.asarray(res.k_history),
+                                  np.asarray(res_pal.k_history))
+    np.testing.assert_array_equal(np.asarray(res.ledger.per_node_j),
+                                  np.asarray(res_pal.ledger.per_node_j))
+    np.testing.assert_array_equal(np.asarray(res.rounds),
+                                  np.asarray(res_pal.rounds))
+    np.testing.assert_allclose(np.asarray(res.acc_history),
+                               np.asarray(res_pal.acc_history),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-game dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def het_batch():
+    n = 6
+    dur = theoretical_duration(n)
+    costs = jnp.asarray([[1.0] * n, [6.0] * n, [3.5] * n])
+    gammas = jnp.full((3, n), 0.2)
+    sol = solve_heterogeneous(costs, gammas, dur, damping=0.6,
+                              max_iters=300)
+    return costs, gammas, dur, sol.p
+
+
+def test_verify_backend_ref_bitwise(het_batch):
+    costs, gammas, dur, p = het_batch
+    np.testing.assert_array_equal(
+        np.asarray(verify_equilibrium_batched(costs, gammas, dur, p)),
+        np.asarray(verify_equilibrium_batched(costs, gammas, dur, p,
+                                              backend="ref")))
+
+
+def test_verify_backend_pallas_parity(het_batch):
+    costs, gammas, dur, p = het_batch
+    dev_ref = verify_equilibrium_batched(costs, gammas, dur, p)
+    dev_pal = verify_equilibrium_batched(costs, gammas, dur, p,
+                                         backend="pallas")
+    np.testing.assert_allclose(np.asarray(dev_pal), np.asarray(dev_ref),
+                               atol=1e-5)
+
+
+def test_social_cost_backend_parity(het_batch):
+    costs, _, dur, p = het_batch
+    sc_ref = social_cost_batched(costs, dur, p)
+    np.testing.assert_array_equal(
+        np.asarray(sc_ref),
+        np.asarray(social_cost_batched(costs, dur, p, backend="ref")))
+    sc_pal = social_cost_batched(costs, dur, p, backend="pallas")
+    np.testing.assert_allclose(np.asarray(sc_pal), np.asarray(sc_ref),
+                               rtol=1e-5)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.core  # noqa: F401  (enables x64 — the campaign params dtype)
 from repro.kernels import ref
 from repro.kernels.fedavg_agg import fedavg_agg
 from repro.kernels.flash_attention import flash_attention
@@ -104,8 +105,13 @@ def test_ssm_scan(bsz, s, din, n, bt, bd):
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_want), atol=2e-4)
 
 
-@pytest.mark.parametrize("n,p,bp", [(4, 1000, 256), (50, 4096, 2048),
-                                    (7, 999, 512)])
+@pytest.mark.parametrize("n,p,bp", [
+    (4, 1000, 256),     # ragged P: last tile 232 wide
+    (50, 4096, 2048),   # exact multiple of block_p
+    (7, 999, 512),      # ragged P, odd client count
+    (1, 777, 256),      # N = 1: mean degenerates to the lone client
+    (3, 100, 2048),     # P < block_p: single shrunken tile
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fedavg_agg(n, p, bp, dtype):
     ks = jax.random.split(jax.random.PRNGKey(5), 3)
@@ -118,10 +124,24 @@ def test_fedavg_agg(n, p, bp, dtype):
                                np.asarray(want, np.float32), **TOL[dtype])
 
 
-def test_fedavg_agg_empty_round_keeps_global():
+def test_fedavg_agg_float64_inputs():
+    """x64 campaign params pass through the fp32 kernel to fp32 accuracy."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    g = jax.random.normal(ks[0], (1000,), jnp.float64)
+    cf = jax.random.normal(ks[1], (6, 1000), jnp.float64)
+    mask = jax.random.bernoulli(ks[2], 0.5, (6,))
+    out = fedavg_agg(g, cf, mask, block_p=256, interpret=True)
+    assert out.dtype == jnp.float64
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.fedavg_agg_ref(g, cf, mask)),
+                               atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.parametrize("n", [1, 5])
+def test_fedavg_agg_empty_round_keeps_global(n):
     g = jnp.arange(100.0)
-    cf = jnp.ones((5, 100))
-    out = fedavg_agg(g, cf, jnp.zeros((5,), bool), block_p=64, interpret=True)
+    cf = jnp.ones((n, 100))
+    out = fedavg_agg(g, cf, jnp.zeros((n,), bool), block_p=64, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(g))
 
 
@@ -137,6 +157,43 @@ def test_fedavg_pytree_wrapper():
     for k in g:
         np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
                                    atol=1e-5)
+
+
+@pytest.mark.parametrize("b,n,bb", [
+    (1, 1, 8),      # degenerate single node
+    (5, 8, 2),      # ragged batch: last tile half-full
+    (4, 50, 4),     # paper fleet size, exact tiling
+    (3, 17, 8),     # batch < block_b: single shrunken tile
+])
+def test_poibin_dft_kernel(b, n, bb):
+    from repro.kernels.poibin_dft import poibin_dft
+    rng = np.random.default_rng(b * 100 + n)
+    p = jnp.asarray(rng.uniform(0.0, 1.0, (b, n)))
+    p = p.at[0, 0].set(0.0)        # corners: deconvolution degenerates
+    if n > 1:
+        p = p.at[0, 1].set(1.0)
+    pmf, loo = poibin_dft(p, block_b=bb, interpret=True)
+    want_pmf, want_loo = ref.poibin_dft_ref(p)
+    assert pmf.shape == (b, n + 1) and loo.shape == (b, n, n + 1)
+    np.testing.assert_allclose(np.asarray(pmf), np.asarray(want_pmf),
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(loo), np.asarray(want_loo),
+                               atol=2e-6)
+    # pmf-only variant (the social-cost path) agrees with the fused one
+    pmf_only = poibin_dft(p, block_b=bb, with_loo=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(pmf_only), np.asarray(pmf),
+                               atol=1e-7)
+
+
+def test_poibin_dft_kernel_float32_inputs():
+    """fp32 in -> fp32 out, same kernel arithmetic."""
+    from repro.kernels.poibin_dft import poibin_dft
+    p = jnp.asarray([[0.25, 0.75, 0.5]], jnp.float32)
+    pmf, loo = poibin_dft(p, interpret=True)
+    assert pmf.dtype == jnp.float32 and loo.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(pmf[0]),
+                               np.asarray(ref.poibin_dft_ref(p)[0][0]),
+                               atol=2e-6)
 
 
 def test_flash_attention_integrated_in_model():

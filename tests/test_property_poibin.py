@@ -9,8 +9,13 @@ corners, which the generic float strategy rarely lands on exactly):
 * the mean equals Σ p_i;
 * leave-one-out deconvolution inverts convolution (both directions), the
   identity the batched heterogeneous engine's O(N) Gauss-Seidel step rests
-  on.
+  on;
+* the batched Pallas DFT kernel (``repro.kernels.poibin_dft``, interpret
+  mode) and its jnp oracle (``repro.kernels.ref.poibin_dft_ref``) both
+  reproduce ``poibin_pmf`` / ``poibin_pmf_loo`` — the kernel to fp32
+  tolerance, the oracle to float64 tightness.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -20,7 +25,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core  # noqa: F401  (enables x64)
 from repro.core.poibin import (poibin_convolve, poibin_mean, poibin_pmf,
-                               poibin_pmf_loo, poibin_pmf_recursive)
+                               poibin_pmf_batched, poibin_pmf_loo,
+                               poibin_pmf_loo_all, poibin_pmf_recursive)
 
 # Probabilities with the corners (and the deconvolution direction switch at
 # 1/2) explicitly over-weighted: plain floats(0, 1) almost never draws them.
@@ -73,6 +79,68 @@ def test_loo_deconvolution_inverts_convolution(p, data):
     back = poibin_convolve(loo, p[i])
     np.testing.assert_allclose(np.asarray(back), np.asarray(full),
                                atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(prob_vectors)
+def test_poibin_kernel_pinned_to_scalar_functions(p):
+    """The Pallas kernel (interpret mode) reproduces ``poibin_pmf`` and
+    ``poibin_pmf_loo`` on a (1, N) batch — including p ∈ {0, 1}, where the
+    deconvolution degenerates to a copy/shift."""
+    from repro.kernels import ops
+
+    p_mat = jnp.asarray([p])
+    pmf_k, loo_k = ops.poibin(p_mat)                     # pallas, fp32
+    want_pmf = poibin_pmf(p_mat[0])
+    want_loo = jax.vmap(poibin_pmf_loo, in_axes=(None, 0))(want_pmf,
+                                                           p_mat[0])
+    np.testing.assert_allclose(np.asarray(pmf_k[0]), np.asarray(want_pmf),
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(loo_k[0]), np.asarray(want_loo),
+                               atol=2e-6)
+    # pmf-only kernel variant agrees with the fused one
+    np.testing.assert_allclose(np.asarray(ops.poibin_pmf(p_mat)),
+                               np.asarray(pmf_k), atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(prob_vectors)
+def test_poibin_kernel_oracle_pinned_to_scalar_functions(p):
+    """The self-contained jnp oracle in ``kernels.ref`` states the same math
+    as ``core.poibin`` — drift between the two layers fails here."""
+    from repro.kernels import ref
+
+    p_mat = jnp.asarray([p])
+    pmf_o, loo_o = ref.poibin_dft_ref(p_mat)
+    np.testing.assert_allclose(np.asarray(pmf_o[0]),
+                               np.asarray(poibin_pmf(p_mat[0])), atol=1e-12)
+    want_loo = jax.vmap(poibin_pmf_loo, in_axes=(None, 0))(pmf_o[0],
+                                                           p_mat[0])
+    np.testing.assert_allclose(np.asarray(loo_o[0]), np.asarray(want_loo),
+                               atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(prob_vectors.filter(lambda v: len(v) >= 2), min_size=1,
+                max_size=4))
+def test_poibin_batched_dispatchers(rows):
+    """The core batched entry points: ref backend bitwise-equals the vmapped
+    scalar functions; pallas backend matches to fp32 tolerance; ragged
+    batches exercise the kernel's batch-tile padding."""
+    n = min(len(r) for r in rows)
+    p_mat = jnp.asarray([r[:n] for r in rows])
+    pmf_ref = poibin_pmf_batched(p_mat)                  # default: ref
+    np.testing.assert_array_equal(np.asarray(pmf_ref),
+                                  np.asarray(jax.vmap(poibin_pmf)(p_mat)))
+    pmf_rec, loo_ref = poibin_pmf_loo_all(p_mat)
+    np.testing.assert_array_equal(
+        np.asarray(pmf_rec),
+        np.asarray(jax.vmap(poibin_pmf_recursive)(p_mat)))
+    pmf_pal, loo_pal = poibin_pmf_loo_all(p_mat, backend="pallas")
+    np.testing.assert_allclose(np.asarray(pmf_pal), np.asarray(pmf_rec),
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(loo_pal), np.asarray(loo_ref),
+                               atol=2e-6)
 
 
 @settings(max_examples=40, deadline=None)
