@@ -24,8 +24,6 @@ Run:  PYTHONPATH=src:. python benchmarks/campaign_sweep.py
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import time
 
 import jax
@@ -36,11 +34,13 @@ import repro.core  # noqa: F401  (enables x64)
 from repro.federated.campaign import build_campaign, run_campaigns
 from repro.federated.simulation import FLConfig, run_simulation_reference
 from repro.federated.tasks import synthetic_mlp_task
+from repro.obs import ObsConfig
+from repro.obs.export import write_artifact
 from repro.optim import sgd
 from benchmarks.common import header, record
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", type=int, default=32)
     ap.add_argument("--sample", type=int, default=3,
@@ -48,7 +48,7 @@ def main() -> None:
     ap.add_argument("--full-reference", action="store_true",
                     help="loop the reference simulator over every scenario")
     ap.add_argument("--json", default="BENCH_campaign.json")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     task = synthetic_mlp_task()
     fl = FLConfig(n_clients=10, local_steps=1, batch_per_client=8,
@@ -93,6 +93,27 @@ def main() -> None:
     t_cold = compile_s["ref"]
     n_conv = int(jnp.sum(res.converged))
 
+    # -- observability overhead ----------------------------------------------
+    # the in-carry metric stream rides the scan; acceptance bar: <= 5%
+    # overhead on the warm sweep (and bitwise-equal outputs, asserted here).
+    obs_engine = build_campaign(fl, *task.campaign_args(), opt,
+                                backend="ref",
+                                obs=ObsConfig(enabled=True))
+    res_obs = run_campaigns(fl, *task.campaign_args(), opt, ps,
+                            engine=obs_engine)
+    jax.block_until_ready(res_obs.energy_wh)
+    t0 = time.perf_counter()
+    res_obs = run_campaigns(fl, *task.campaign_args(), opt, ps,
+                            engine=obs_engine)
+    jax.block_until_ready(res_obs.energy_wh)
+    t_obs = time.perf_counter() - t0
+    np.testing.assert_array_equal(np.asarray(res_obs.acc_history),
+                                  np.asarray(res.acc_history))
+    obs_overhead = t_obs / t_fused - 1.0
+    record("campaign_sweep.obs_overhead", t_obs * 1e6,
+           f"metric-stream sweep; {obs_overhead * 100:+.1f}% vs "
+           f"uninstrumented (bar <= 5%); outputs bitwise-equal")
+
     # -- reference loop ------------------------------------------------------
     if args.full_reference:
         idx = np.arange(args.scenarios)
@@ -120,7 +141,7 @@ def main() -> None:
     record("campaign_sweep.speedup", speedup,
            f"target >= 50x; fused {t_fused:.2f}s vs reference {t_ref:.1f}s")
 
-    payload = {
+    write_artifact(args.json, "campaign_sweep", {
         "scenarios": args.scenarios,
         "max_rounds": fl.max_rounds,
         "n_clients": fl.n_clients,
@@ -129,6 +150,8 @@ def main() -> None:
         "fused_s_by_backend": {k: round(v, 4)
                                for k, v in backend_s.items()},
         "fused_compile_s": round(t_cold, 2),
+        "obs_instrumented_s": round(t_obs, 4),
+        "obs_overhead_pct": round(obs_overhead * 100, 2),
         "reference_s": round(t_ref, 2),
         "reference_timing": tag,
         "speedup": round(speedup, 1),
@@ -138,8 +161,7 @@ def main() -> None:
                            for i in range(args.scenarios)},
         "mean_aoi_by_p": {f"{float(ps[i]):.3f}": float(res.mean_aoi[i])
                           for i in range(args.scenarios)},
-    }
-    pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+    }, seed=fl.seed, backend="ref")
     print(f"\nfused sweep: {t_fused:.2f}s for {args.scenarios} campaigns "
           f"({t_fused / args.scenarios * 1e3:.1f} ms/campaign)")
     print(f"reference:   {t_ref:.1f}s ({tag})")

@@ -1,10 +1,19 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission.
+
+Timing goes through :func:`time_fn`, which returns the full
+``repro.obs.export.timing_stats`` dict (p50/p95/mean/min/max µs over a
+configurable number of iterations) instead of a bare median — benchmark
+emitters stamp these stats straight into their schema'd artifacts. Call
+sites that only want one number read ``stats["p50_us"]``.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Any, Callable
 
 import jax
+
+from repro.obs.export import timing_stats
 
 ROWS: list[tuple[str, float, str]] = []
 
@@ -14,19 +23,23 @@ def record(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time per call in microseconds (block_until_ready)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
+def time_fn(fn: Callable, *args, warmup: int = 1,
+            iters: int = 5) -> dict[str, Any]:
+    """Time ``fn(*args)`` synchronously; returns a timing-stats dict.
+
+    Keys: ``p50_us``, ``p95_us``, ``mean_us``, ``min_us``, ``max_us``,
+    ``n`` (see :func:`repro.obs.export.timing_stats`). Each sample wraps
+    one call in ``jax.block_until_ready``; ``warmup`` calls are discarded
+    first (compile + cache effects).
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(iters, 1)):
         t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return timing_stats(samples)
 
 
 def header() -> None:

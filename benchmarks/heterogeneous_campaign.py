@@ -18,8 +18,6 @@ Run:  PYTHONPATH=src:. python benchmarks/heterogeneous_campaign.py
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import time
 
 import jax
@@ -34,6 +32,7 @@ from repro.federated.campaign import ChurnConfig, build_campaign, run_campaigns
 from repro.federated.simulation import (FLConfig,
                                         run_heterogeneous_reference)
 from repro.federated.tasks import synthetic_mlp_task
+from repro.obs.export import write_artifact
 from repro.optim import sgd
 from benchmarks.common import header, record
 
@@ -58,7 +57,7 @@ def solve_fleet_profiles(scenarios: int) -> tuple[np.ndarray, jnp.ndarray]:
                                          damping=0.6, max_iters=300)
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", type=int, default=32)
     ap.add_argument("--sample", type=int, default=3,
@@ -66,7 +65,7 @@ def main() -> None:
     ap.add_argument("--full-reference", action="store_true",
                     help="loop the reference simulator over every scenario")
     ap.add_argument("--json", default="BENCH_hetero_campaign.json")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     task = synthetic_mlp_task()
     fl = FLConfig(n_clients=N_NODES, local_steps=1, batch_per_client=8,
@@ -181,7 +180,7 @@ def main() -> None:
             if (~w).any() else None,
         })
 
-    payload = {
+    write_artifact(args.json, "hetero_campaign", {
         "scenarios": args.scenarios,
         "n_clients": N_NODES,
         "max_rounds": fl.max_rounds,
@@ -199,8 +198,7 @@ def main() -> None:
         "per_node_aoi": np.round(a_np, 4).tolist(),
         "present_counts": np.asarray(res.present_counts).tolist(),
         "strata": split,
-    }
-    pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+    }, seed=fl.seed, backend="ref")
     print(f"\nfused sweep: {t_fused:.2f}s for {args.scenarios} per-node "
           f"campaigns ({t_fused / args.scenarios * 1e3:.1f} ms/campaign)")
     print(f"reference:   {t_ref:.1f}s ({tag})")

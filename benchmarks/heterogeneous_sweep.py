@@ -50,7 +50,7 @@ def build_scenarios(batch: int, seed: int = 0):
     return costs, gammas, theoretical_duration(N_NODES)
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=500,
                     help="scenarios in the sweep (acceptance bar: >= 500)")
@@ -58,7 +58,7 @@ def main() -> None:
                     help="scalar scenarios to time (extrapolated to all)")
     ap.add_argument("--full-scalar", action="store_true",
                     help="loop the scalar solver over every scenario")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     costs, gammas, dur = build_scenarios(args.batch)
     header()

@@ -1,0 +1,102 @@
+"""Localize the fedavg_agg / poibin pallas-vs-ref gap with measured numbers.
+
+The perf trajectory has carried a "fedavg_agg interpret-mode ~35x slower
+than the jnp reference on CPU" note since the kernel landed, with nothing
+to say *where* the time goes. This benchmark pins it down per kernel and
+backend using the obs layer:
+
+* :func:`repro.obs.trace.compile_stats` — trace/lower and XLA-compile wall
+  times split from warm execute stats (p50/p95/mean), plus the compiled
+  module's own ``cost_analysis()`` FLOPs / bytes-accessed and
+  ``memory_analysis()`` buffer sizes;
+* dispatch counters — ``repro.kernels.ops.dispatch_stats()`` snapshotted
+  over the measured region, proving which call sites resolved to which
+  backend while tracing (no silent env/override leakage into the numbers).
+
+Emits ``BENCH_kernel_gap.json`` (schema ``repro.obs/v1``, kind
+``kernel_gap``); the checked-in copy lives at
+``experiments/obs/BENCH_kernel_gap.json``.
+
+Run:  PYTHONPATH=src:. python benchmarks/kernel_gap.py
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+
+from benchmarks.common import header, record
+from repro.kernels import ops
+from repro.obs.export import write_artifact
+from repro.obs.trace import compile_stats
+
+# The campaign hot-path merge shape (kernels_micro's fedavg case) and the
+# NE-engine poibin batch.
+FEDAVG_SHAPE = dict(n_clients=50, n_params=1 << 16)
+POIBIN_SHAPE = dict(scenarios=64, n_nodes=50)
+
+
+def _fedavg_case(key):
+    n, p = FEDAVG_SHAPE["n_clients"], FEDAVG_SHAPE["n_params"]
+    ks = jax.random.split(key, 3)
+    g = jax.random.normal(ks[0], (p,))
+    cf = jax.random.normal(ks[1], (n, p))
+    mask = jax.random.bernoulli(ks[2], 0.5, (n,))
+    return (g, cf, mask)
+
+
+def _poibin_case(key):
+    b, n = POIBIN_SHAPE["scenarios"], POIBIN_SHAPE["n_nodes"]
+    return (jax.random.uniform(key, (b, n)),)
+
+
+def measure(seed: int = 0, iters: int = 10) -> dict:
+    """compile-vs-execute + cost_analysis for both kernels x both backends."""
+    key = jax.random.PRNGKey(seed)
+    cases = {
+        "fedavg_agg": (ops.fedavg, _fedavg_case(key), FEDAVG_SHAPE),
+        "poibin": (ops.poibin, _poibin_case(key), POIBIN_SHAPE),
+    }
+    ops.reset_dispatch_stats()
+    kernels: dict[str, dict] = {}
+    for name, (fn, args, shape) in cases.items():
+        per_backend = {}
+        for backend in ("pallas", "ref"):
+            stats = compile_stats(functools.partial(fn, backend=backend),
+                                  *args, iters=iters)
+            per_backend[backend] = stats
+            record(f"kernel_gap.{name}[{backend}]",
+                   stats["execute"]["p50_us"],
+                   f"compile {stats['compile_s']:.2f}s, "
+                   f"{stats['flops']:.2e} flops, "
+                   f"{stats['bytes_accessed']:.2e} B")
+        ratio = (per_backend["pallas"]["execute"]["p50_us"]
+                 / max(per_backend["ref"]["execute"]["p50_us"], 1e-9))
+        record(f"kernel_gap.{name}.ratio", ratio,
+               "pallas-interpret p50 / ref p50 (CPU; not a TPU projection)")
+        kernels[name] = {"shape": shape, **per_backend,
+                         "pallas_over_ref_p50": round(ratio, 2)}
+    return {
+        "note": "pallas rows are interpret mode on CPU: the execute gap is "
+                "interpreter overhead, not kernel arithmetic — flops/bytes "
+                "are XLA post-optimization estimates per compiled module",
+        "iters": iters,
+        "kernels": kernels,
+        "dispatch_stats": ops.dispatch_stats(),
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_kernel_gap.json")
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args(argv)
+    header()
+    data = measure(iters=args.iters)
+    write_artifact(args.json, "kernel_gap", data, seed=0)
+    print(f"\nkernel gap localization -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

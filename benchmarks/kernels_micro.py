@@ -13,8 +13,6 @@ Run:  PYTHONPATH=src:. python benchmarks/kernels_micro.py   # -> BENCH_kernels.j
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +21,7 @@ from benchmarks.common import header, record, time_fn
 from repro.kernels import ref
 from repro.kernels.ops import (attention, cross_entropy, fedavg, poibin,
                                rwkv6, ssm)
+from repro.obs.export import write_artifact
 
 
 def run_all() -> dict[str, dict]:
@@ -32,15 +31,16 @@ def run_all() -> dict[str, dict]:
 
     def bench(name: str, pallas_fn, ref_fn, derived) -> None:
         """``derived`` is the label string, or a callable of the measured
-        microseconds (for bandwidth-style labels) so nothing is timed
+        p50 microseconds (for bandwidth-style labels) so nothing is timed
         twice just to format it."""
-        us = time_fn(pallas_fn)
-        label = derived(us) if callable(derived) else derived
-        record(f"kernel_{name}", us, f"{label} (interpret)")
-        us_ref = time_fn(ref_fn)
-        record(f"kernel_{name}_ref", us_ref, "pure-jnp reference backend")
-        results[name] = {"pallas_interpret_us": round(us, 1),
-                         "ref_us": round(us_ref, 1), "derived": label}
+        stats = time_fn(pallas_fn)
+        label = derived(stats["p50_us"]) if callable(derived) else derived
+        record(f"kernel_{name}", stats["p50_us"], f"{label} (interpret)")
+        stats_ref = time_fn(ref_fn)
+        record(f"kernel_{name}_ref", stats_ref["p50_us"],
+               "pure-jnp reference backend")
+        results[name] = {"pallas_interpret": stats,
+                         "ref": stats_ref, "derived": label}
 
     key = jax.random.PRNGKey(0)
 
@@ -116,20 +116,19 @@ def run_all() -> dict[str, dict]:
     return results
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_kernels.json")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     header()
     results = run_all()
-    payload = {
+    write_artifact(args.json, "kernels_micro", {
         "backend_default": "pallas (interpret on CPU; compiled on TPU)",
         "note": "interpret-mode wall times validate the harness, they are "
-                "not TPU projections; ref_us is the pure-jnp backend "
+                "not TPU projections; 'ref' is the pure-jnp backend "
                 "(`backend='ref'` / REPRO_KERNEL_BACKEND=ref)",
         "kernels": results,
-    }
-    pathlib.Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+    }, seed=0)
     print(f"\n{len(results)} kernels -> {args.json}")
 
 

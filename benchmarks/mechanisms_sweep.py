@@ -56,13 +56,13 @@ def solve_game_scalar(up: UtilityParams, dur) -> float:
     return poa
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sample", type=int, default=20,
                     help="scalar scenarios to time (extrapolated to all)")
     ap.add_argument("--full-scalar", action="store_true",
                     help="loop the scalar solver over every scenario")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     scenarios, dur_for_n = build_scenarios()
     total = len(scenarios)

@@ -1,0 +1,88 @@
+"""End-to-end observability smoke: one tiny fully-instrumented campaign.
+
+Runs a small scenario sweep with every obs channel on at once —
+
+* in-carry :class:`~repro.obs.metrics.MetricStream` (per-round
+  participation / merge norm / ledger delta / accuracy),
+* :class:`~repro.obs.events.EventSink` tapped from inside the jitted scan
+  (``jax.debug.callback``) appending JSONL,
+* :class:`~repro.obs.trace.SpanTracer` spans around the host phases with
+  Chrome-trace export (load in https://ui.perfetto.dev),
+
+— then cross-checks the instrumented outputs against an uninstrumented run
+(bitwise) and writes three artifacts: ``OBS_events.jsonl``,
+``TRACE_obs_smoke.json``, ``BENCH_obs_smoke.json``. CI validates all three
+with ``tools/obs_report.py --check``.
+
+Run:  PYTHONPATH=src:. python benchmarks/obs_smoke.py
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.federated.campaign import run_campaigns
+from repro.federated.simulation import FLConfig
+from repro.federated.tasks import synthetic_mlp_task
+from repro.obs import EventSink, ObsConfig, SpanTracer
+from repro.obs.export import write_artifact
+from repro.optim import sgd
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_obs_smoke.json")
+    ap.add_argument("--events", default="OBS_events.jsonl")
+    ap.add_argument("--trace", default="TRACE_obs_smoke.json")
+    ap.add_argument("--scenarios", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    task = synthetic_mlp_task()
+    fl = FLConfig(n_clients=5, local_steps=1, batch_per_client=8,
+                  max_rounds=8, target_acc=0.73, seed=3)
+    opt = sgd(0.15)
+    ps = jnp.asarray(np.linspace(0.2, 0.8, args.scenarios), jnp.float32)
+
+    tracer = SpanTracer(process_name="obs_smoke")
+    with tracer.span("baseline", scenarios=args.scenarios):
+        base = run_campaigns(fl, *task.campaign_args(), opt, ps)
+        jax.block_until_ready(base.acc_history)
+
+    with EventSink(args.events) as sink:
+        obs = ObsConfig(enabled=True, events=True, sink=sink)
+        with tracer.span("instrumented_compile+run"):
+            res = run_campaigns(fl, *task.campaign_args(), opt, ps, obs=obs)
+            jax.block_until_ready(res.acc_history)
+        with tracer.span("instrumented_warm"):
+            res = run_campaigns(fl, *task.campaign_args(), opt, ps, obs=obs)
+            jax.block_until_ready(res.acc_history)
+        sink.flush()
+        n_events = len(sink)
+
+    with tracer.span("readout"):
+        # instrumentation must not perturb the program: bitwise check
+        np.testing.assert_array_equal(np.asarray(res.acc_history),
+                                      np.asarray(base.acc_history))
+        np.testing.assert_array_equal(np.asarray(res.ledger.per_node_j),
+                                      np.asarray(base.ledger.per_node_j))
+        summary = res.metrics.summary()
+
+    tracer.save(args.trace)
+    write_artifact(args.json, "obs_smoke", {
+        "scenarios": args.scenarios,
+        "max_rounds": fl.max_rounds,
+        "bitwise_equal_to_uninstrumented": True,
+        "events": n_events,
+        "metrics": summary,
+        "spans": tracer.summary(),
+    }, seed=fl.seed, backend="ref")
+    print(f"obs smoke: {n_events} events -> {args.events}; "
+          f"trace -> {args.trace}; artifact -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

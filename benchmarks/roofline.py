@@ -16,6 +16,12 @@ counting routed experts at top_k/n_experts utilization. The ratio
 MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is useful
 (remat + dispatch overheads show up here).
 
+The md also carries a **measured kernel costs** section fed by the
+``kernel_gap`` artifact (``benchmarks/kernel_gap.py`` →
+``experiments/obs/BENCH_kernel_gap.json``): per kernel × backend, the
+compiled module's own cost_analysis FLOPs/bytes and the *measured* warm
+p50 — real numbers next to the analytic terms above.
+
 Writes experiments/roofline.md and emits one CSV row per combo.
 """
 from __future__ import annotations
@@ -178,18 +184,57 @@ def suggestion(row: dict) -> str:
             "overlap collectives with compute, or shrink per-step traffic")
 
 
-def run(emit_rows: bool = True) -> list[dict]:
-    if not os.path.isdir(ART_DIR):
-        print("no dry-run artifacts; run python -m repro.launch.dryrun --all")
+def kernel_rows() -> list[dict]:
+    """Measured kernel costs from the latest ``kernel_gap`` artifact.
+
+    Prefers a fresh ``BENCH_kernel_gap.json`` in the working directory,
+    falling back to the checked-in ``experiments/obs`` copy; returns one
+    row per kernel x backend with measured p50 and XLA FLOPs/bytes (and
+    the arithmetic intensity they imply).
+    """
+    candidates = [
+        "BENCH_kernel_gap.json",
+        os.path.join(os.path.dirname(ART_DIR), "obs",
+                     "BENCH_kernel_gap.json"),
+    ]
+    art = None
+    for c in candidates:
+        if os.path.exists(c):
+            with open(c) as f:
+                art = json.load(f)
+            break
+    if art is None:
         return []
     rows = []
-    for f in sorted(os.listdir(ART_DIR)):
-        if not f.endswith(".json"):
-            continue
-        r = analyze_artifact(os.path.join(ART_DIR, f))
-        if r:
-            rows.append(r)
+    for kname, k in art["data"]["kernels"].items():
+        for backend in ("pallas", "ref"):
+            s = k[backend]
+            flops, byts = s["flops"], s["bytes_accessed"]
+            rows.append({
+                "kernel": kname, "backend": backend,
+                "compile_s": s["compile_s"],
+                "p50_us": s["execute"]["p50_us"],
+                "flops": flops, "bytes": byts,
+                "ai": flops / byts if byts else float("nan"),
+            })
+    return rows
 
+
+def run(emit_rows: bool = True) -> list[dict]:
+    rows = []
+    if not os.path.isdir(ART_DIR):
+        # Keep going: the measured-kernel section below only needs the
+        # kernel_gap artifact, not the dry-run estimates.
+        print("no dry-run artifacts; run python -m repro.launch.dryrun --all")
+    else:
+        for f in sorted(os.listdir(ART_DIR)):
+            if not f.endswith(".json"):
+                continue
+            r = analyze_artifact(os.path.join(ART_DIR, f))
+            if r:
+                rows.append(r)
+
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
     with open(OUT_MD, "w") as md:
         md.write("# Roofline terms per (arch × shape × mesh)\n\n")
         md.write("Terms in seconds/step on TPU v5e "
@@ -208,7 +253,28 @@ def run(emit_rows: bool = True) -> list[dict]:
                 f"| {r['t_compute']:.3e} | {r['t_memory']:.3e} "
                 f"| {r['t_collective']:.3e} | **{r['dominant']}** "
                 f"| {r['useful_ratio']:.2f} | {suggestion(r)} |\n")
+        krows = kernel_rows()
+        if krows:
+            md.write("\n## Measured kernel costs (CPU; kernel_gap "
+                     "artifact)\n\n")
+            md.write("XLA post-optimization cost_analysis per compiled "
+                     "module + warm p50 wall time; pallas rows run in "
+                     "interpret mode, so their wall times bound the "
+                     "harness, not a TPU.\n\n")
+            md.write("| kernel | backend | compile (s) | p50 (µs) | "
+                     "FLOPs | bytes | AI (flop/byte) |\n")
+            md.write("|---|---|---|---|---|---|---|\n")
+            for k in krows:
+                md.write(f"| {k['kernel']} | {k['backend']} "
+                         f"| {k['compile_s']:.2f} | {k['p50_us']:.1f} "
+                         f"| {k['flops']:.2e} | {k['bytes']:.2e} "
+                         f"| {k['ai']:.3f} |\n")
     if emit_rows:
+        for k in kernel_rows():
+            record(f"roofline_kernel_{k['kernel']}[{k['backend']}]",
+                   k["p50_us"],
+                   f"measured: {k['flops']:.2e} flops, {k['bytes']:.2e} B, "
+                   f"AI={k['ai']:.3f}")
         for r in rows:
             if r["mesh"] != "16x16" or r["preset"] != "baseline":
                 continue        # CSV rows: single-pod baselines per the spec

@@ -305,7 +305,8 @@ def verify_equilibrium_batched(
     costs, gammas, d_tab, p = _prepare_batch(costs, gammas, dur, p)
     from repro.kernels import ops as kernel_ops  # lazy: keep core light
 
-    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+    if kernel_ops.resolve_backend(
+            backend, default="ref", site="ne.verify_equilibrium_batched") == "pallas":
         return _verify_vmapped_pallas(costs, gammas, d_tab, p,
                                       grid=int(grid))
     return _verify_vmapped(costs, gammas, d_tab, p, grid=int(grid))
@@ -345,7 +346,8 @@ def social_cost_batched(costs: jax.Array, dur: DurationModel | jax.Array,
     costs, _, d_tab, p = _prepare_batch(costs, jnp.zeros_like(costs), dur, p)
     from repro.kernels import ops as kernel_ops  # lazy: keep core light
 
-    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+    if kernel_ops.resolve_backend(
+            backend, default="ref", site="ne.social_cost_batched") == "pallas":
         return _social_cost_vmapped_pallas(costs, d_tab, p)
     return _social_cost_vmapped(costs, d_tab, p)
 

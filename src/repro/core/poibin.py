@@ -155,7 +155,8 @@ def poibin_pmf_batched(p: jax.Array, *, backend: str | None = None
     """
     from repro.kernels import ops as kernel_ops  # lazy: keep core light
 
-    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+    if kernel_ops.resolve_backend(
+            backend, default="ref", site="poibin.pmf_batched") == "pallas":
         return kernel_ops.poibin_pmf(p, backend="pallas")
     return jax.vmap(poibin_pmf)(p)
 
@@ -174,7 +175,8 @@ def poibin_pmf_loo_all(p: jax.Array, *, backend: str | None = None
     """
     from repro.kernels import ops as kernel_ops  # lazy: keep core light
 
-    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+    if kernel_ops.resolve_backend(
+            backend, default="ref", site="poibin.pmf_loo_all") == "pallas":
         return kernel_ops.poibin(p, backend="pallas")
     pmf = jax.vmap(poibin_pmf_recursive)(p)
     loo = jax.vmap(jax.vmap(poibin_pmf_loo, in_axes=(None, 0)))(pmf, p)

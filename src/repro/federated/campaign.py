@@ -45,6 +45,15 @@ The round's FedAvg merge dispatches through the kernel layer:
 (:mod:`repro.kernels.fedavg_agg`), the default ``"ref"`` keeps the pure-jnp
 merge and its bitwise-reproducible results — see ``docs/kernels.md``.
 
+The engine is observable in-flight (``docs/observability.md``): pass an
+:class:`repro.obs.ObsConfig` to record a per-round
+:class:`repro.obs.MetricStream` (participants, merge norms, ledger deltas,
+accuracy) in the scan carry and/or stream per-round events to a host
+:class:`repro.obs.EventSink` via ``jax.debug.callback``. Observability is
+off by default and ``obs=None`` builds the identical program — the bitwise
+pins are unaffected; even enabled, the instrumentation only adds outputs
+(RNG streams and results are untouched, pinned in ``tests/test_obs.py``).
+
 See ``docs/architecture.md`` for the layer diagram and the scan-carry /
 reference-oracle conventions, and ``docs/api.md`` for runnable snippets.
 """
@@ -60,6 +69,8 @@ from repro.core.aoi import AoITracker
 from repro.core.energy import J_PER_WH, EnergyLedger, EnergyParams
 from repro.federated.client import make_local_train
 from repro.federated.server import ConvergenceTracker, fedavg_merge
+from repro.obs import ObsConfig
+from repro.obs.metrics import MetricStream, merge_norm
 from repro.optim.base import Optimizer
 
 __all__ = ["CampaignResult", "ChurnConfig", "build_campaign", "run_campaigns"]
@@ -139,6 +150,7 @@ class CampaignResult:
     aoi: AoITracker              # batched
     present_counts: jax.Array    # (B, N) rounds each node was in the fleet
     present_final: jax.Array     # (B, N) bool presence after the last round
+    metrics: MetricStream | None = None  # batched, when obs recorded one
 
     @property
     def batch(self) -> int:
@@ -172,6 +184,7 @@ def build_campaign(
     *,
     churn: bool = False,
     backend: str | None = None,
+    obs: ObsConfig | None = None,
 ):
     """Compile the campaign engine for one task definition.
 
@@ -186,39 +199,52 @@ def build_campaign(
     bitwise-identical to the dispatch-free engine) or ``"pallas"`` (the
     fused :mod:`repro.kernels.fedavg_agg` kernel, vmapped over the
     scenario batch as an extra grid dimension; parity to tolerance, see
-    ``tests/test_kernels.py``).
+    ``tests/test_kernels.py``). ``obs`` (static, default off) instruments
+    the program: ``obs.metrics`` adds a :class:`repro.obs.MetricStream`
+    to the scan carry, ``obs.events`` streams per-round events to
+    ``obs.sink`` via ``jax.debug.callback``. Instrumentation never touches
+    an RNG stream or a computed value — it only adds outputs.
 
     Returns a jitted engine:
 
     * ``churn=False`` — ``fn(p, seeds, e_participant_j, e_idle_j)``;
     * ``churn=True``  — ``fn(p, seeds, e_participant_j, e_idle_j,
-      arrival, departure, present0)``.
+      arrival, departure, present0)``;
+    * with ``obs.events`` enabled, a trailing ``scenario_ids (B,)`` arg is
+      appended (event records need a stable per-scenario identity under
+      ``vmap``).
 
     ``p`` is ``(B, N)``; ``seeds`` ``(B,)``; the joule rates are per-round
     energies, ``(B,)`` scalar-per-scenario or ``(B, N)`` per-node; the churn
     probabilities/presence are ``(B, N)``. The engine returns the raw
     batched scan state (dict of params/ledger/tracker/aoi/accs/ks, plus
-    present/present_counts under churn). Use :func:`run_campaigns` for the
-    friendly wrapper.
+    present/present_counts under churn and metrics under obs). Use
+    :func:`run_campaigns` for the friendly wrapper.
     """
     n = fl.n_clients
     train_one = make_local_train(loss_fn, opt)
+    record_metrics = obs is not None and obs.record_metrics
+    emit_events = obs is not None and obs.emit_events
+    sink = obs.sink if emit_events else None
 
     def train_round(params, p_vec, mask_rng, r):
         """Shared round body: masks → local training → merge → validation."""
-        mask = jax.random.bernoulli(mask_rng, p_vec, (n,))
-        batches = jax.vmap(
-            lambda cid: client_data(cid, r, fl.batch_per_client,
-                                    fl.local_steps))(jnp.arange(n))
-        client_params, _ = jax.vmap(train_one, in_axes=(None, 0))(
-            params, batches)
+        with jax.named_scope("campaign/masks"):
+            mask = jax.random.bernoulli(mask_rng, p_vec, (n,))
+        with jax.named_scope("campaign/local_train"):
+            batches = jax.vmap(
+                lambda cid: client_data(cid, r, fl.batch_per_client,
+                                        fl.local_steps))(jnp.arange(n))
+            client_params, _ = jax.vmap(train_one, in_axes=(None, 0))(
+                params, batches)
         return mask, client_params
 
-    # One body for both engines: ``churn`` is static Python, so the
-    # branches below resolve at trace time — the churn-free program is
-    # instruction-identical to the symmetric engine's.
+    # One body for both engines: ``churn``/``obs`` are static Python, so
+    # the branches below resolve at trace time — the churn-free,
+    # obs-free program is instruction-identical to the symmetric engine's.
     def one_campaign(p_vec, seed, e_participant_j, e_idle_j,
-                     arrival=None, departure=None, present0=None):
+                     arrival=None, departure=None, present0=None,
+                     scenario_id=None):
         key = jax.random.PRNGKey(seed)
         state0 = (
             init_params(jax.random.fold_in(key, 1)),
@@ -232,21 +258,24 @@ def build_campaign(
                 jnp.asarray(present0, bool),     # fleet presence
                 jnp.zeros((n,), jnp.int64),      # per-node presence rounds
             )
+        if record_metrics:
+            state0 += (MetricStream.create(fl.max_rounds),)
 
         def round_step(carry, r):
-            params, ledger, tracker, aoi, last_acc, *presence = carry
+            params, ledger, tracker, aoi, last_acc, *rest = carry
             active = ~tracker.converged
             if churn:
-                present, pcount = presence
+                present, pcount = rest[0], rest[1]
                 # Churn draws come from their own stream (CHURN_STREAM), so
                 # the participation stream — and with zero churn the masks
                 # themselves — stay bitwise-identical to the churn-free
                 # engine.
-                ka, kd = jax.random.split(
-                    jax.random.fold_in(key, CHURN_STREAM + r))
-                arrive = jax.random.bernoulli(ka, arrival, (n,))
-                depart = jax.random.bernoulli(kd, departure, (n,))
-                here = jnp.where(present, ~depart, arrive)
+                with jax.named_scope("campaign/churn"):
+                    ka, kd = jax.random.split(
+                        jax.random.fold_in(key, CHURN_STREAM + r))
+                    arrive = jax.random.bernoulli(ka, arrival, (n,))
+                    depart = jax.random.bernoulli(kd, departure, (n,))
+                    here = jnp.where(present, ~depart, arrive)
             else:
                 here = None
 
@@ -256,27 +285,44 @@ def build_campaign(
             mask, client_params = train_round(params, p_vec, rng, r)
             if churn:
                 mask = mask & here               # absentees cannot join
-            merged = fedavg_merge(params, client_params, mask,
-                                  backend=backend)
-            acc = eval_fn(merged, val_batch)
+            with jax.named_scope("campaign/merge"):
+                merged = fedavg_merge(params, client_params, mask,
+                                      backend=backend)
+            with jax.named_scope("campaign/validate"):
+                acc = eval_fn(merged, val_batch)
 
             new_acc = jnp.where(active, acc, last_acc)
-            new_carry = (
-                _tree_select(active, merged, params),
-                _tree_select(active,
-                             ledger.record_round_j(mask, e_participant_j,
-                                                   e_idle_j), ledger),
-                tracker.masked_update(acc, jnp.asarray(r, jnp.int32), active),
-                _tree_select(active, aoi.update(mask, here), aoi),
-                new_acc,
-            )
-            if churn:
-                new_carry += (
-                    jnp.where(active, here, present),
-                    pcount + jnp.where(active,
-                                       jnp.asarray(here, jnp.int64), 0),
+            with jax.named_scope("campaign/accounting"):
+                new_ledger = ledger.record_round_j(mask, e_participant_j,
+                                                   e_idle_j)
+                new_carry = (
+                    _tree_select(active, merged, params),
+                    _tree_select(active, new_ledger, ledger),
+                    tracker.masked_update(acc, jnp.asarray(r, jnp.int32),
+                                          active),
+                    _tree_select(active, aoi.update(mask, here), aoi),
+                    new_acc,
                 )
+                if churn:
+                    new_carry += (
+                        jnp.where(active, here, present),
+                        pcount + jnp.where(active,
+                                           jnp.asarray(here, jnp.int64), 0),
+                    )
             k = jnp.where(active, jnp.sum(jnp.asarray(mask, jnp.int32)), 0)
+            if record_metrics:
+                with jax.named_scope("campaign/obs_metrics"):
+                    stream = rest[-1]
+                    recorded = stream.record(
+                        participants=k,
+                        merge_norm=jnp.where(
+                            active, merge_norm(merged, params), 0.0),
+                        ledger_delta_j=new_ledger.total_j - ledger.total_j,
+                        accuracy=new_acc)
+                    new_carry += (_tree_select(active, recorded, stream),)
+            if emit_events:
+                sink.tap("round", scenario=scenario_id, round=r,
+                         active=active, participants=k, accuracy=new_acc)
             return new_carry, (new_acc, k)
 
         final, (accs, ks) = jax.lax.scan(round_step, state0,
@@ -285,10 +331,25 @@ def build_campaign(
                "aoi": final[3], "accs": accs, "ks": ks}
         if churn:
             out.update(present=final[5], present_counts=final[6])
+        if record_metrics:
+            out["metrics"] = final[-1]
+        if emit_events:
+            tracker = out["tracker"]
+            sink.tap("campaign", scenario=scenario_id,
+                     converged_at=tracker.converged_at,
+                     energy_j=out["ledger"].total_j)
         return out
 
-    if churn:
+    if churn and emit_events:
         return jax.jit(jax.vmap(one_campaign))
+    if churn:
+        return jax.jit(jax.vmap(
+            lambda p, s, ep, ei, ar, de, pr: one_campaign(
+                p, s, ep, ei, ar, de, pr)))
+    if emit_events:
+        return jax.jit(jax.vmap(
+            lambda p, s, ep, ei, sid: one_campaign(
+                p, s, ep, ei, scenario_id=sid)))
     return jax.jit(jax.vmap(
         lambda p, s, ep, ei: one_campaign(p, s, ep, ei)))
 
@@ -352,6 +413,7 @@ def run_campaigns(
     seeds: Sequence[int] | jax.Array | None = None,
     engine: Callable | None = None,
     backend: str | None = None,
+    obs: ObsConfig | None = None,
 ) -> CampaignResult:
     """Run B FedAvg campaigns as one jitted scan+vmap program.
 
@@ -383,6 +445,13 @@ def run_campaigns(
         backend: FedAvg-merge implementation, ``"ref"`` (default —
             bitwise-stable jnp path) or ``"pallas"`` (fused kernel); see
             :func:`build_campaign`.
+        obs: optional :class:`repro.obs.ObsConfig`. With metrics enabled
+            the result carries a batched :class:`repro.obs.MetricStream`
+            in ``.metrics``; with events enabled, per-round events stream
+            to ``obs.sink``. ``None`` (the default) builds the
+            uninstrumented program. A prebuilt ``engine`` bakes in its own
+            ``obs``, and this call's must match it (the engine signature
+            and outputs depend on it).
 
     Returns:
         A :class:`CampaignResult`; per-node realized splits live in
@@ -411,12 +480,13 @@ def run_campaigns(
 
     fn = engine if engine is not None else build_campaign(
         fl, init_params, loss_fn, eval_fn, client_data, val_batch, opt,
-        churn=churn is not None, backend=backend)
+        churn=churn is not None, backend=backend, obs=obs)
+    call_args = [p_arr, seeds, e_part, e_idle]
     if churn is not None:
-        arrival, departure, present0 = churn.as_arrays(batch, n)
-        out = fn(p_arr, seeds, e_part, e_idle, arrival, departure, present0)
-    else:
-        out = fn(p_arr, seeds, e_part, e_idle)
+        call_args.extend(churn.as_arrays(batch, n))
+    if obs is not None and obs.emit_events:
+        call_args.append(jnp.arange(batch, dtype=jnp.int32))
+    out = fn(*call_args)
 
     tracker, ledger, aoi = out["tracker"], out["ledger"], out["aoi"]
     converged = tracker.converged_at >= 0
@@ -445,4 +515,5 @@ def run_campaigns(
         aoi=aoi,
         present_counts=present_counts,
         present_final=present_final,
+        metrics=out.get("metrics"),
     )

@@ -40,7 +40,8 @@ def fedavg_merge(global_params, client_params, mask: jax.Array,
     """
     from repro.kernels import ops as kernel_ops  # lazy: keep imports light
 
-    if kernel_ops.resolve_backend(backend, default="ref") == "pallas":
+    if kernel_ops.resolve_backend(
+            backend, default="ref", site="server.fedavg_merge") == "pallas":
         m = mask if weights is None \
             else mask.astype(jnp.float32) * weights.astype(jnp.float32)
         return kernel_ops.fedavg_merge_pallas(global_params, client_params, m)

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import contextlib
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,7 @@ from repro.kernels.ssm_scan import ssm_scan as _ssm_pallas
 
 __all__ = ["BACKENDS", "ENV_VAR", "resolve_backend", "set_backend",
            "backend_scope", "use_pallas",
+           "dispatch_stats", "reset_dispatch_stats",
            "attention", "rwkv6", "ssm", "fedavg", "cross_entropy",
            "fedavg_merge_pallas", "poibin", "poibin_pmf"]
 
@@ -52,6 +54,10 @@ BACKENDS = ("pallas", "ref")
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 _override: str | None = None   # set_backend() state; beats the env var
+_env_warned = False            # warn-once latch for a bogus env value
+
+#: (call_site, backend) -> number of trace-time dispatch resolutions.
+_dispatch_counts: dict[tuple[str, str], int] = {}
 
 
 def _interpret() -> bool:
@@ -64,23 +70,105 @@ def _validate(backend: str) -> str:
     return backend
 
 
+def _env_backend() -> str | None:
+    """The env-var backend, or ``None`` — warning once on a bogus value.
+
+    A typo'd ``REPRO_KERNEL_BACKEND`` must not blow up an import chain (or
+    every later resolution) with an exception the user can't trace back to
+    their shell profile: it is reported once on stderr and then ignored,
+    so resolution falls through to the override/default chain.
+    """
+    global _env_warned
+    env = os.environ.get(ENV_VAR)
+    if not env:
+        return None
+    if env not in BACKENDS:
+        if not _env_warned:
+            print(f"repro.kernels.ops: ignoring {ENV_VAR}={env!r} "
+                  f"(unknown backend; expected one of {BACKENDS})",
+                  file=sys.stderr)
+            _env_warned = True
+        return None
+    return env
+
+
+_env_backend()   # surface a bogus env value at import, not mid-sweep
+
+
 def resolve_backend(backend: str | None = None, *,
-                    default: str = "pallas") -> str:
+                    default: str = "pallas",
+                    site: str | None = None) -> str:
     """Resolve a ``backend=`` argument to ``"pallas"`` or ``"ref"``.
 
-    Precedence: explicit argument > :func:`set_backend` override >
-    ``REPRO_KERNEL_BACKEND`` env var > ``default`` (the call site's own
-    default — ``"pallas"`` for kernel wrappers, ``"ref"`` for the
-    bitwise-reproducible campaign/game hot loops).
+    Precedence (first hit wins):
+
+    1. the explicit ``backend=`` argument — always honoured, so a call
+       site can pin itself regardless of process state (invalid values
+       raise ``ValueError``);
+    2. a process-wide :func:`set_backend` override (or its scoped form
+       :func:`backend_scope`) — programmatic control, beats the env;
+    3. the ``REPRO_KERNEL_BACKEND`` environment variable — deploy-time
+       control without code changes (an *unknown* value is ignored with a
+       one-time stderr warning rather than raising, so a typo'd shell
+       export can't break imports);
+    4. ``default`` — the call site's own default: ``"pallas"`` for the
+       model-kernel wrappers, ``"ref"`` for the bitwise-reproducible
+       campaign/game hot loops.
+
+    Resolution happens at **trace time** (a jitted program bakes in the
+    backend it was traced with). ``site`` names the call site for the
+    dispatch telemetry: every resolution with a ``site`` increments a
+    ``(site, backend)`` counter readable via :func:`dispatch_stats`.
+
+    Debugging a backend regression with the counters::
+
+        from repro.kernels import ops
+        ops.reset_dispatch_stats()
+        run_the_slow_sweep(...)
+        print(ops.dispatch_stats())
+        # {'server.fedavg_merge': {'pallas': 1}, 'ops.poibin': {'ref': 2}}
+
+    The stats say which call sites resolved to which backend *while
+    tracing* — exactly the map needed to localize a "the sweep is slower
+    on pallas" report to the kernel/call-site pair responsible (see
+    ``benchmarks/kernel_gap.py`` for the packaged version).
     """
+    resolved = _resolve(backend, default)
+    if site is not None:
+        key = (site, resolved)
+        _dispatch_counts[key] = _dispatch_counts.get(key, 0) + 1
+    return resolved
+
+
+def _resolve(backend: str | None, default: str) -> str:
     if backend is not None:
         return _validate(backend)
     if _override is not None:
         return _override
-    env = os.environ.get(ENV_VAR)
-    if env:
-        return _validate(env)
+    env = _env_backend()
+    if env is not None:
+        return env
     return _validate(default)
+
+
+def dispatch_stats() -> dict[str, dict[str, int]]:
+    """Trace-time dispatch counters: ``{site: {backend: count}}``.
+
+    Counts *resolutions* (one per trace of each call site), not runtime
+    executions — a jitted program resolves once when traced and then runs
+    the baked-in backend. Sites are only counted when the wrapper passes
+    ``site=`` (all wrappers in this module and the campaign/game hot-path
+    call sites do).
+    """
+    out: dict[str, dict[str, int]] = {}
+    for (site, backend), count in sorted(_dispatch_counts.items()):
+        out.setdefault(site, {})[backend] = count
+    return out
+
+
+def reset_dispatch_stats() -> None:
+    """Zero the dispatch counters (start of a measured region)."""
+    _dispatch_counts.clear()
 
 
 def set_backend(backend: str | None) -> str | None:
@@ -125,7 +213,7 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
               block_q: int = 128, block_k: int = 128,
               backend: str | None = None):
     """Flash attention. q: (B,S,H,D); k,v: (B,S,KV,D) -> (B,S,H,D)."""
-    if resolve_backend(backend) == "ref":
+    if resolve_backend(backend, site="ops.attention") == "ref":
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     return _flash_pallas(q, k, v, causal=causal, window=window,
                          block_q=block_q, block_k=block_k,
@@ -134,7 +222,7 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 def rwkv6(r, k, v, w, u, *, block_t: int = 256, backend: str | None = None):
     """WKV6 recurrence. r,k,v,w: (B,S,H,D); u: (H,D) -> (out, state)."""
-    if resolve_backend(backend) == "ref":
+    if resolve_backend(backend, site="ops.rwkv6") == "ref":
         return ref.rwkv6_scan_ref(r, k, v, w, u)
     return _rwkv6_pallas(r, k, v, w, u, block_t=block_t,
                          interpret=_interpret())
@@ -143,7 +231,7 @@ def rwkv6(r, k, v, w, u, *, block_t: int = 256, backend: str | None = None):
 def ssm(x, delta, a_log, b, c, d_skip, *, block_t: int = 256,
         block_d: int = 512, backend: str | None = None):
     """Mamba selective scan. x,delta: (B,S,Din) -> (y, h_final)."""
-    if resolve_backend(backend) == "ref":
+    if resolve_backend(backend, site="ops.ssm") == "ref":
         return ref.ssm_scan_ref(x, delta, a_log, b, c, d_skip)
     return _ssm_pallas(x, delta, a_log, b, c, d_skip, block_t=block_t,
                        block_d=block_d, interpret=_interpret())
@@ -152,7 +240,7 @@ def ssm(x, delta, a_log, b, c, d_skip, *, block_t: int = 256,
 def cross_entropy(hidden, w_vocab, labels, *, block_t: int = 128,
                   block_v: int = 512, backend: str | None = None):
     """Fused per-token NLL without materializing (T, V) logits in HBM."""
-    if resolve_backend(backend) == "ref":
+    if resolve_backend(backend, site="ops.cross_entropy") == "ref":
         return ref.fused_ce_ref(hidden, w_vocab, labels)
     return _fused_ce_pallas(hidden, w_vocab, labels, block_t=block_t,
                             block_v=block_v, interpret=_interpret())
@@ -171,7 +259,7 @@ def fedavg(global_flat, client_flat, mask, *, block_p: int = 2048,
     the kernel wrapper; N = 1 and the all-zero mask (previous-global
     fallback) are supported.
     """
-    if resolve_backend(backend) == "ref":
+    if resolve_backend(backend, site="ops.fedavg") == "ref":
         return ref.fedavg_agg_ref(global_flat, client_flat, mask)
     return _fedavg_pallas(global_flat, client_flat, mask, block_p=block_p,
                           interpret=_interpret())
@@ -217,7 +305,7 @@ def poibin(p_mat, *, block_b: int = 8, backend: str | None = None):
     :func:`repro.kernels.ref.poibin_dft_ref`); the ``"ref"`` backend runs
     that oracle in the input dtype.
     """
-    if resolve_backend(backend) == "ref":
+    if resolve_backend(backend, site="ops.poibin") == "ref":
         return ref.poibin_dft_ref(p_mat)
     return _poibin_pallas(p_mat, block_b=block_b, with_loo=True,
                           interpret=_interpret())
@@ -229,7 +317,7 @@ def poibin_pmf(p_mat, *, block_b: int = 8, backend: str | None = None):
     The pmf-only variant of :func:`poibin` (the leave-one-out pass is
     skipped entirely — e.g. the social-cost evaluation only needs pmfs).
     """
-    if resolve_backend(backend) == "ref":
+    if resolve_backend(backend, site="ops.poibin_pmf") == "ref":
         return ref.poibin_dft_ref(p_mat, with_loo=False)
     return _poibin_pallas(p_mat, block_b=block_b, with_loo=False,
                           interpret=_interpret())

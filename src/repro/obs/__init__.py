@@ -1,0 +1,97 @@
+"""`repro.obs` — observability for the jitted campaign/NE/kernel hot paths.
+
+The repo's argument runs on measured quantities (per-node energy ledgers,
+AoI trajectories, PoA sweeps, kernel timings), yet jitted programs are
+opaque post-hoc: by the time a sweep returns, *where* the time and FLOPs
+went is gone. This package makes the hot paths observable without touching
+their semantics:
+
+* :mod:`repro.obs.export` — the **one artifact schema** every BENCH/trace
+  emitter uses: versioned envelope, run metadata (git sha, jax/jaxlib
+  version, device kind, seed, backend), timings as p50/p95/mean. Validated
+  by ``tools/obs_report.py --check``.
+* :mod:`repro.obs.trace` — ``perf_counter`` span tracer with Chrome-trace
+  (Perfetto-loadable) export, plus compile-vs-execute accounting for jitted
+  functions (jit compile time + lowered ``cost_analysis()`` FLOPs/bytes).
+* :mod:`repro.obs.events` — a host-side structured-event sink fed from
+  *inside* jitted programs via ``jax.debug.callback``; events are JSONL
+  lines with the same schema envelope.
+* :mod:`repro.obs.metrics` — :class:`MetricStream`, the in-carry
+  metric-stream buffer the campaign engine records per-round participation
+  counts, merge norms, and ledger deltas into (a registered pytree, so it
+  vmaps/scans like every other tracker).
+
+The hard contract, pinned in ``tests/test_obs.py``: observability is **off
+by default**, and ``ObsConfig(enabled=False)`` (or ``obs=None``) is a
+strict no-op — the instrumented engines build the *identical* program and
+all pre-existing bitwise-equality pins stay green. Even with ``enabled=
+True`` the instrumentation only *adds* outputs (extra carry leaves, host
+callbacks); it never perturbs an RNG stream or a computed value.
+
+See ``docs/observability.md`` for the walkthrough.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.obs.events import EventSink
+from repro.obs.export import (SCHEMA, run_metadata, make_artifact,
+                              write_artifact, validate_artifact,
+                              validate_events_jsonl, timing_stats)
+from repro.obs.metrics import MetricStream
+from repro.obs.trace import SpanTracer, compile_stats
+
+__all__ = [
+    "ObsConfig",
+    "EventSink",
+    "MetricStream",
+    "SpanTracer",
+    "compile_stats",
+    "SCHEMA",
+    "run_metadata",
+    "make_artifact",
+    "write_artifact",
+    "validate_artifact",
+    "validate_events_jsonl",
+    "timing_stats",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Static observability switches for the instrumented engines.
+
+    All fields are *static* Python values: they select what program gets
+    traced, exactly like ``churn``/``backend`` in
+    :func:`repro.federated.campaign.build_campaign`. The master switch
+    gates everything — ``ObsConfig()`` (or passing ``obs=None``) builds
+    the uninstrumented program, bit-for-bit.
+
+    Attributes:
+        enabled: master switch (default off).
+        metrics: record a :class:`MetricStream` in the scan carry
+            (per-round participants, merge norm, ledger delta, accuracy).
+            Pure extra outputs — cheap enough to leave on when ``enabled``.
+        events: stream per-round events to ``sink`` from inside the jitted
+            program via ``jax.debug.callback``. Host round-trips per round
+            per scenario — for small instrumented runs, not timed sweeps.
+        sink: the :class:`EventSink` receiving events (required when
+            ``events=True``).
+    """
+
+    enabled: bool = False
+    metrics: bool = True
+    events: bool = False
+    sink: EventSink | None = None
+
+    def __post_init__(self):
+        if self.enabled and self.events and self.sink is None:
+            raise ValueError("ObsConfig(events=True) needs a sink")
+
+    @property
+    def record_metrics(self) -> bool:
+        return self.enabled and self.metrics
+
+    @property
+    def emit_events(self) -> bool:
+        return self.enabled and self.events and self.sink is not None

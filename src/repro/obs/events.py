@@ -1,0 +1,162 @@
+"""Host-side structured event sink, fed from inside jitted programs.
+
+:class:`EventSink` collects schema-versioned events
+(``repro.obs.event/v1``) in memory and optionally appends them to a JSONL
+file as they arrive. Two entry points:
+
+* :meth:`EventSink.emit` — plain host-side emission (benchmark phases,
+  run boundaries);
+* :meth:`EventSink.tap` — **inside-jit** emission: stages a
+  ``jax.debug.callback`` whose host half converts the runtime arrays to
+  JSON-able scalars/lists and emits them. Under ``vmap`` the callback
+  fires once per batch element (each event carries that element's
+  values); ``ordered=True`` sequences events with program order but is
+  only legal outside ``vmap`` (a JAX restriction).
+
+The no-op contract: a disabled sink's ``tap`` stages **nothing** — the
+traced program is byte-identical to the uninstrumented one, which is what
+keeps the campaign engine's bitwise-equality pins green when observability
+is off (``tests/test_obs.py``).
+
+Events are host-visible only after the device work runs; call
+:meth:`EventSink.flush` (which issues a ``jax.effects_barrier()``) before
+reading ``events`` or closing the file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Any, IO
+
+__all__ = ["EventSink"]
+
+from repro.obs.export import EVENT_SCHEMA
+
+
+def _jsonable(v: Any) -> Any:
+    """Convert a host-landed runtime value to a JSON-able python value."""
+    import numpy as np
+
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        item = arr.item()
+        if isinstance(item, (bool, int, str)):
+            return item
+        return float(item)
+    return arr.tolist()
+
+
+class EventSink:
+    """Append-only structured event stream (memory + optional JSONL file).
+
+    Args:
+        path: optional ``.jsonl`` file to append each event to as it
+            arrives (one JSON object per line, artifact-schema'd).
+        enabled: master switch; a disabled sink ignores ``emit`` and makes
+            ``tap`` a strict no-op inside traced code.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None,
+                 enabled: bool = True):
+        self.enabled = enabled
+        self.path = pathlib.Path(path) if path is not None else None
+        self._events: list[dict[str, Any]] = []
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._file: IO[str] | None = None
+        self._t0 = time.perf_counter()
+        if self.path is not None and enabled:
+            if self.path.parent != pathlib.Path("."):
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._file = self.path.open("w")
+
+    # -- host-side ----------------------------------------------------------
+
+    def emit(self, event: str, /, **fields: Any) -> None:
+        """Record one event now (host side)."""
+        if not self.enabled:
+            return
+        with self._lock:
+            record = {
+                "schema": EVENT_SCHEMA,
+                "event": event,
+                "seq": self._seq,
+                "ts_us": round((time.perf_counter() - self._t0) * 1e6, 1),
+                **fields,
+            }
+            self._seq += 1
+            self._events.append(record)
+            if self._file is not None:
+                self._file.write(json.dumps(record) + "\n")
+
+    # -- inside-jit ---------------------------------------------------------
+
+    def tap(self, event: str, /, *, ordered: bool = False,
+            **arrays: Any) -> None:
+        """Stage an event emission inside a traced program.
+
+        Args:
+            event: event name (static).
+            ordered: sequence the callback with program order
+                (``jax.debug.callback(ordered=True)``); required for
+                strict intra-program ordering guarantees, but illegal
+                under ``vmap`` — batched call sites use the default and
+                rely on ``seq`` stamped at host arrival.
+            arrays: traced (or concrete) values; they land on the host as
+                numpy and are stored as scalars/lists.
+
+        No-op (stages nothing) when the sink is disabled.
+        """
+        if not self.enabled:
+            return
+        import jax
+
+        names = tuple(arrays)
+
+        def _cb(*vals):
+            self.emit(event, **{n: _jsonable(v)
+                                for n, v in zip(names, vals)})
+
+        jax.debug.callback(_cb, *arrays.values(), ordered=ordered)
+
+    # -- readout ------------------------------------------------------------
+
+    def flush(self) -> None:
+        """Drain pending device-side callbacks and sync the JSONL file."""
+        if not self.enabled:
+            return
+        try:
+            import jax
+
+            jax.effects_barrier()
+        except Exception:
+            pass
+        with self._lock:
+            if self._file is not None:
+                self._file.flush()
+
+    def close(self) -> None:
+        self.flush()
+        with self._lock:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+
+    @property
+    def events(self) -> list[dict[str, Any]]:
+        """Snapshot of events received so far (call :meth:`flush` first)."""
+        with self._lock:
+            return list(self._events)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)
+
+    def __enter__(self) -> "EventSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,247 @@
+"""The one BENCH/trace artifact schema (``repro.obs/v1``).
+
+Every benchmark emitter in this repo — ``benchmarks/campaign_sweep.py``,
+``benchmarks/heterogeneous_campaign.py``, ``benchmarks/kernels_micro.py``,
+``benchmarks/kernel_gap.py``, the obs smoke run — wraps its payload in the
+same versioned envelope:
+
+.. code-block:: json
+
+    {
+      "schema": "repro.obs/v1",
+      "kind": "campaign_sweep",
+      "meta": {
+        "git_sha": "…", "jax": "0.4.37", "jaxlib": "0.4.36",
+        "device_kind": "cpu", "platform": "cpu", "device_count": 1,
+        "python": "3.11.9", "hostname": "…", "timestamp": "…",
+        "seed": 1, "backend": "ref"
+      },
+      "data": { … }
+    }
+
+so artifacts from different runs/machines/backends are *comparable*: the
+perf trajectory accumulates points with enough metadata to explain a jump.
+Timings inside ``data`` use the :func:`timing_stats` shape —
+``{"p50_us", "p95_us", "mean_us", "min_us", "max_us", "n"}`` — never a
+bare single-sample number.
+
+Validation is hand-rolled (no jsonschema dependency in the container):
+:func:`validate_artifact` / :func:`validate_events_jsonl` return a list of
+problems, and ``tools/obs_report.py --check`` turns them into a CI gate.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import pathlib
+import socket
+import subprocess
+import sys
+from typing import Any, Iterable, Sequence
+
+SCHEMA = "repro.obs/v1"
+EVENT_SCHEMA = "repro.obs.event/v1"
+
+#: meta keys every artifact must carry (``seed``/``backend`` are optional —
+#: not every artifact has a single one of either).
+REQUIRED_META = ("git_sha", "jax", "jaxlib", "device_kind", "platform",
+                 "timestamp")
+
+_TIMING_KEYS = ("p50_us", "p95_us", "mean_us", "min_us", "max_us", "n")
+
+
+def git_sha(repo_dir: str | os.PathLike | None = None) -> str:
+    """Current commit sha (``+dirty`` suffixed), or ``"unknown"``."""
+    cwd = str(repo_dir) if repo_dir else os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"], cwd=cwd,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        if not sha:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        return sha + ("+dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
+def run_metadata(*, seed: int | None = None, backend: str | None = None,
+                 **extra: Any) -> dict[str, Any]:
+    """Stamp the run: git sha, jax/jaxlib versions, device kind, seed, …
+
+    Imports jax lazily so schema validation (``obs_report --check``) stays
+    usable in environments without an accelerator stack warmed up.
+    """
+    import jax
+    import jaxlib
+
+    dev = jax.devices()[0]
+    meta: dict[str, Any] = {
+        "git_sha": git_sha(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "platform": dev.platform,
+        "device_count": jax.device_count(),
+        "python": sys.version.split()[0],
+        "hostname": socket.gethostname(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    if seed is not None:
+        meta["seed"] = int(seed)
+    if backend is not None:
+        meta["backend"] = backend
+    meta.update(extra)
+    return meta
+
+
+def timing_stats(samples_s: Sequence[float]) -> dict[str, float | int]:
+    """p50/p95/mean/min/max (µs) + sample count from wall times in seconds.
+
+    The schema's timing shape: a lone median hides multimodality (first-run
+    caching, GC pauses) and a lone mean hides tails, so artifacts carry
+    both plus the p95. Percentiles use linear interpolation on the sorted
+    samples (numpy-free so the events path stays import-light).
+    """
+    if not samples_s:
+        raise ValueError("timing_stats needs at least one sample")
+    xs = sorted(float(s) * 1e6 for s in samples_s)
+    n = len(xs)
+
+    def pct(q: float) -> float:
+        if n == 1:
+            return xs[0]
+        pos = q * (n - 1)
+        lo = int(pos)
+        hi = min(lo + 1, n - 1)
+        return xs[lo] + (pos - lo) * (xs[hi] - xs[lo])
+
+    return {
+        "p50_us": round(pct(0.50), 3),
+        "p95_us": round(pct(0.95), 3),
+        "mean_us": round(sum(xs) / n, 3),
+        "min_us": round(xs[0], 3),
+        "max_us": round(xs[-1], 3),
+        "n": n,
+    }
+
+
+def make_artifact(kind: str, data: dict[str, Any], *,
+                  seed: int | None = None, backend: str | None = None,
+                  **extra_meta: Any) -> dict[str, Any]:
+    """Wrap a payload in the versioned envelope with fresh run metadata."""
+    if not kind:
+        raise ValueError("artifact kind must be a non-empty string")
+    return {
+        "schema": SCHEMA,
+        "kind": kind,
+        "meta": run_metadata(seed=seed, backend=backend, **extra_meta),
+        "data": data,
+    }
+
+
+def write_artifact(path: str | os.PathLike, kind: str, data: dict[str, Any],
+                   *, seed: int | None = None, backend: str | None = None,
+                   **extra_meta: Any) -> dict[str, Any]:
+    """:func:`make_artifact` + pretty-printed JSON to ``path``."""
+    art = make_artifact(kind, data, seed=seed, backend=backend, **extra_meta)
+    p = pathlib.Path(path)
+    if p.parent != pathlib.Path("."):
+        p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(art, indent=2, sort_keys=False) + "\n")
+    return art
+
+
+def _walk_timings(node: Any, path: str, problems: list[str]) -> None:
+    """Any dict that *looks like* a timing block must be a complete one."""
+    if isinstance(node, dict):
+        keys = set(node)
+        if keys & {"p50_us", "p95_us"}:
+            missing = [k for k in _TIMING_KEYS if k not in keys]
+            if missing:
+                problems.append(
+                    f"{path}: timing block missing {missing}")
+            elif not all(isinstance(node[k], (int, float))
+                         for k in _TIMING_KEYS):
+                problems.append(f"{path}: non-numeric timing values")
+        for k, v in node.items():
+            _walk_timings(v, f"{path}.{k}", problems)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_timings(v, f"{path}[{i}]", problems)
+
+
+def validate_artifact(obj: Any, *, path: str = "artifact") -> list[str]:
+    """Schema-check one artifact object; returns a list of problems.
+
+    Checks the envelope (schema string, kind, meta with
+    :data:`REQUIRED_META`, dict data) and that every timing-shaped block
+    anywhere in ``data`` carries the full p50/p95/mean/min/max/n set.
+    """
+    problems: list[str] = []
+    if not isinstance(obj, dict):
+        return [f"{path}: not a JSON object"]
+    if obj.get("schema") != SCHEMA:
+        problems.append(
+            f"{path}: schema {obj.get('schema')!r}, want {SCHEMA!r}")
+    if not isinstance(obj.get("kind"), str) or not obj.get("kind"):
+        problems.append(f"{path}: missing/empty 'kind'")
+    meta = obj.get("meta")
+    if not isinstance(meta, dict):
+        problems.append(f"{path}: missing 'meta' object")
+    else:
+        for key in REQUIRED_META:
+            if key not in meta:
+                problems.append(f"{path}: meta missing {key!r}")
+    data = obj.get("data")
+    if not isinstance(data, dict):
+        problems.append(f"{path}: missing 'data' object")
+    else:
+        _walk_timings(data, f"{path}.data", problems)
+    return problems
+
+
+def validate_events_jsonl(lines: Iterable[str], *,
+                          path: str = "events") -> list[str]:
+    """Schema-check a JSONL event stream (one event object per line).
+
+    Each line must parse, carry ``schema == "repro.obs.event/v1"``, a
+    non-empty ``event`` name, a numeric ``ts_us`` host timestamp, and a
+    monotonically non-decreasing ``seq`` sequence number.
+    """
+    problems: list[str] = []
+    last_seq = -1
+    n = 0
+    for i, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        n += 1
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append(f"{path}:{i}: unparseable JSON ({e})")
+            continue
+        if ev.get("schema") != EVENT_SCHEMA:
+            problems.append(f"{path}:{i}: schema {ev.get('schema')!r}, "
+                            f"want {EVENT_SCHEMA!r}")
+        if not isinstance(ev.get("event"), str) or not ev.get("event"):
+            problems.append(f"{path}:{i}: missing 'event' name")
+        if not isinstance(ev.get("ts_us"), (int, float)):
+            problems.append(f"{path}:{i}: missing numeric 'ts_us'")
+        seq = ev.get("seq")
+        if not isinstance(seq, int):
+            problems.append(f"{path}:{i}: missing integer 'seq'")
+        elif seq < last_seq:
+            problems.append(f"{path}:{i}: seq {seq} < previous {last_seq}")
+        else:
+            last_seq = seq
+    if n == 0:
+        problems.append(f"{path}: empty event stream")
+    return problems

@@ -1,0 +1,132 @@
+"""In-carry metric-stream buffer for jitted scan loops.
+
+:class:`MetricStream` is a registered-dataclass pytree of fixed-shape
+per-round buffers that rides a ``lax.scan`` carry next to the engine's
+own trackers (ledger/convergence/AoI). Each active round appends one row
+via a masked ``.at[cursor].set``; post-convergence no-op rounds leave the
+buffer untouched (the engine wraps the update in the same leafwise-where
+masking as every other tracker), so ``cursor`` lands exactly on the
+realized round count.
+
+It records *derived observables only* — participation counts, the merge
+update norm, the round's ledger energy delta, validation accuracy — and
+never touches an RNG stream or feeds back into the computation, which is
+what keeps the instrumented engine's results bitwise-equal to the
+uninstrumented one (pinned in ``tests/test_obs.py``).
+
+``jax.vmap`` over scenarios adds a leading batch axis to every leaf, like
+the other carry pytrees: a batched campaign returns a ``(B, R)``-leaved
+stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MetricStream", "merge_norm"]
+
+
+def merge_norm(new_params, old_params) -> jax.Array:
+    """Global L2 norm of a pytree update (fp32) — the merge-step metric.
+
+    ``||new - old||_2`` over all leaves; a cheap convergence/health signal
+    (a collapsing norm means the merge stopped moving; a spike flags a
+    divergent round) that costs one reduction per leaf.
+    """
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda n, o: jnp.sum(
+            jnp.square(n.astype(jnp.float32) - o.astype(jnp.float32))),
+            new_params, old_params))
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MetricStream:
+    """Fixed-shape per-round metric buffers (scan-carry pytree).
+
+    Attributes:
+        cursor: scalar int32 — rows recorded so far (== realized rounds).
+        participants: ``(R,)`` int32 — participation count per round.
+        merge_norm: ``(R,)`` float32 — L2 norm of the FedAvg update.
+        ledger_delta_j: ``(R,)`` float — round energy delta in Joules.
+        accuracy: ``(R,)`` float32 — validation accuracy per round.
+
+    Rows past ``cursor`` are zero. ``R`` is the static scan length
+    (``max_rounds``).
+    """
+
+    cursor: jax.Array
+    participants: jax.Array
+    merge_norm: jax.Array
+    ledger_delta_j: jax.Array
+    accuracy: jax.Array
+
+    @staticmethod
+    def create(max_rounds: int) -> "MetricStream":
+        return MetricStream(
+            cursor=jnp.zeros((), jnp.int32),
+            participants=jnp.zeros((max_rounds,), jnp.int32),
+            merge_norm=jnp.zeros((max_rounds,), jnp.float32),
+            ledger_delta_j=jnp.zeros((max_rounds,), jnp.float64),
+            accuracy=jnp.zeros((max_rounds,), jnp.float32),
+        )
+
+    def record(self, *, participants: jax.Array, merge_norm: jax.Array,
+               ledger_delta_j: jax.Array,
+               accuracy: jax.Array) -> "MetricStream":
+        """Append one row at ``cursor``; mask with the engine's ``active``
+        select (like every other carry tracker) to make no-op rounds skip
+        the append."""
+        r = self.cursor
+        return MetricStream(
+            cursor=r + 1,
+            participants=self.participants.at[r].set(
+                jnp.asarray(participants, jnp.int32)),
+            merge_norm=self.merge_norm.at[r].set(
+                jnp.asarray(merge_norm, jnp.float32)),
+            ledger_delta_j=self.ledger_delta_j.at[r].set(
+                jnp.asarray(ledger_delta_j, self.ledger_delta_j.dtype)),
+            accuracy=self.accuracy.at[r].set(
+                jnp.asarray(accuracy, jnp.float32)),
+        )
+
+    @property
+    def rounds(self) -> jax.Array:
+        """Realized rounds recorded (``(B,)`` for a batched stream)."""
+        return self.cursor
+
+    def summary(self) -> dict[str, Any]:
+        """JSON-able rollup for artifacts (host-side; handles batching).
+
+        Per-round rows are reported up to the max cursor across the batch;
+        scalars are means over recorded rows only.
+        """
+        import numpy as np
+
+        cur = np.atleast_1d(np.asarray(self.cursor))
+        r_max = int(cur.max())
+        part = np.atleast_2d(np.asarray(self.participants))[:, :r_max]
+        norm = np.atleast_2d(np.asarray(self.merge_norm))[:, :r_max]
+        dj = np.atleast_2d(np.asarray(self.ledger_delta_j))[:, :r_max]
+        acc = np.atleast_2d(np.asarray(self.accuracy))[:, :r_max]
+        valid = (np.arange(r_max)[None, :] < cur[:, None])
+        nv = np.maximum(valid.sum(), 1)
+        return {
+            "rounds": cur.tolist(),
+            "mean_participants": round(float(
+                (part * valid).sum() / nv), 3),
+            "mean_merge_norm": round(float((norm * valid).sum() / nv), 5),
+            "total_energy_j": round(float((dj * valid).sum()), 3),
+            "final_accuracy": [round(float(a[max(c - 1, 0)]), 5)
+                               for a, c in zip(acc, cur)],
+            "per_round": {
+                "participants": part.tolist(),
+                "merge_norm": np.round(norm, 5).tolist(),
+                "ledger_delta_j": np.round(dj, 3).tolist(),
+                "accuracy": np.round(acc, 5).tolist(),
+            },
+        }

@@ -1,0 +1,215 @@
+"""Span tracing + compile-vs-execute accounting for jitted programs.
+
+Two complementary views of where the time goes:
+
+* :class:`SpanTracer` — host-side ``perf_counter`` spans around the
+  *phases* of a run (game solve, engine build, compile, warm sweep, …)
+  with Chrome-trace export: load the emitted JSON in `Perfetto
+  <https://ui.perfetto.dev>`_ (or ``chrome://tracing``) and read the
+  timeline. Spans nest; each span can carry arbitrary JSON-able ``args``.
+* :func:`compile_stats` — the *compiled program's* own accounting:
+  ``jax.jit(fn).lower(...)`` / ``.compile()`` wall times split out
+  (compile-vs-execute — the number the campaign-sweep "compile 27s" lines
+  were eyeballing), plus XLA's lowered ``cost_analysis()`` FLOPs/bytes and
+  ``memory_analysis()`` buffer sizes. These are *measured-program* numbers
+  — what ``benchmarks/roofline.py`` and ``benchmarks/kernel_gap.py`` feed
+  on instead of analytic guesses.
+
+Inside jitted code, regions are annotated with ``jax.named_scope`` (pure
+HLO metadata — zero runtime effect, shows up in XLA dumps and profiler
+traces); the campaign/NE engines carry ``campaign/…`` and ``ne/…`` scopes.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Any, Callable
+
+__all__ = ["SpanTracer", "compile_stats"]
+
+
+class SpanTracer:
+    """Nestable wall-clock spans with Chrome-trace (Perfetto) export.
+
+    .. code-block:: python
+
+        tracer = SpanTracer()
+        with tracer.span("sweep", scenarios=32):
+            with tracer.span("compile"):
+                ...
+        tracer.save("TRACE_sweep.json")   # load in ui.perfetto.dev
+
+    A disabled tracer (``SpanTracer(enabled=False)``) is a no-op whose
+    ``span`` still yields, so call sites never branch. Thread-safe: spans
+    carry the recording thread's id as the trace ``tid``.
+    """
+
+    def __init__(self, enabled: bool = True, *, process_name: str = "repro"):
+        self.enabled = enabled
+        self.process_name = process_name
+        self._events: list[dict[str, Any]] = []
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args: Any):
+        """Record a complete ("X") trace event around the with-block."""
+        if not self.enabled:
+            yield self
+            return
+        start = self._now_us()
+        try:
+            yield self
+        finally:
+            end = self._now_us()
+            with self._lock:
+                self._events.append({
+                    "name": name, "ph": "X", "ts": start,
+                    "dur": end - start, "pid": os.getpid(),
+                    "tid": threading.get_ident(),
+                    "args": args or {},
+                })
+
+    def instant(self, name: str, **args: Any) -> None:
+        """Record a zero-duration instant event (trace marker)."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self._events.append({
+                "name": name, "ph": "i", "ts": self._now_us(), "s": "p",
+                "pid": os.getpid(), "tid": threading.get_ident(),
+                "args": args or {},
+            })
+
+    @property
+    def spans(self) -> list[dict[str, Any]]:
+        """The recorded events (Chrome-trace dicts, µs timestamps)."""
+        with self._lock:
+            return list(self._events)
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        """Total/count per span name (µs) — the quick textual view."""
+        out: dict[str, dict[str, float]] = {}
+        for ev in self.spans:
+            if ev["ph"] != "X":
+                continue
+            s = out.setdefault(ev["name"], {"total_us": 0.0, "count": 0})
+            s["total_us"] += ev["dur"]
+            s["count"] += 1
+        for s in out.values():
+            s["total_us"] = round(s["total_us"], 1)
+        return out
+
+    def to_chrome_trace(self) -> dict[str, Any]:
+        """The ``{"traceEvents": [...]}`` object Perfetto loads directly."""
+        meta = [{
+            "name": "process_name", "ph": "M", "pid": os.getpid(),
+            "args": {"name": self.process_name},
+        }]
+        return {"traceEvents": meta + self.spans,
+                "displayTimeUnit": "ms"}
+
+    def save(self, path: str | os.PathLike) -> pathlib.Path:
+        """Write the Chrome trace JSON; returns the path written."""
+        p = pathlib.Path(path)
+        if p.parent != pathlib.Path("."):
+            p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_chrome_trace()) + "\n")
+        return p
+
+
+def _merge_cost(cost: Any) -> dict[str, float]:
+    """Normalize ``cost_analysis()`` output across jax versions.
+
+    Older jaxlibs return a list of per-computation dicts, newer a single
+    dict; keys of interest are ``flops`` and ``bytes accessed``.
+    """
+    if cost is None:
+        return {}
+    dicts = cost if isinstance(cost, (list, tuple)) else [cost]
+    merged: dict[str, float] = {}
+    for d in dicts:
+        if not isinstance(d, dict):
+            continue
+        for k, v in d.items():
+            if isinstance(v, (int, float)):
+                merged[k] = merged.get(k, 0.0) + float(v)
+    return merged
+
+
+def compile_stats(fn: Callable, *args: Any,
+                  static_argnames: Any = None,
+                  warmup: int = 1, iters: int = 10,
+                  **kwargs: Any) -> dict[str, Any]:
+    """Compile-vs-execute accounting for one jitted function + inputs.
+
+    Lowers and compiles ``jax.jit(fn)`` explicitly (so trace/lower and
+    XLA-compile wall times are split out of the usual first-call blur),
+    reads the compiled executable's ``cost_analysis()`` /
+    ``memory_analysis()``, then times ``iters`` synchronous executions.
+
+    Returns a dict ready for an artifact's ``data``:
+
+    ``{"lower_s", "compile_s", "execute": timing_stats-dict,
+    "flops", "bytes_accessed", "cost_analysis": {...},
+    "memory": {"argument_bytes", "output_bytes", "temp_bytes"}}``
+
+    FLOPs/bytes are XLA's *post-optimization* estimates for the compiled
+    module on this platform — real measured-program numbers (remat, fusion
+    and interpret-mode overheads all show up), unlike the analytic
+    intensities the kernel micro-bench labels carry.
+    """
+    import jax
+
+    from repro.obs.export import timing_stats
+
+    jitted = jax.jit(fn, static_argnames=static_argnames)
+    t0 = time.perf_counter()
+    lowered = jitted.lower(*args, **kwargs)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    cost = {}
+    try:
+        cost = _merge_cost(compiled.cost_analysis())
+    except Exception:
+        pass
+    memory: dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+        memory = {
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+        }
+    except Exception:
+        pass
+
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(compiled(*args, **kwargs))
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*args, **kwargs))
+        samples.append(time.perf_counter() - t0)
+
+    return {
+        "lower_s": round(t_lower, 4),
+        "compile_s": round(t_compile, 4),
+        "execute": timing_stats(samples),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if k in ("flops", "bytes accessed",
+                                   "transcendentals")},
+        "memory": memory,
+    }

@@ -79,9 +79,33 @@ def test_invalid_backend_rejected(monkeypatch):
         ops.resolve_backend("mosaic")
     with pytest.raises(ValueError):
         ops.set_backend("tpu")
+
+
+def test_invalid_env_warns_once_and_falls_back(monkeypatch, capsys):
+    """A typo'd env var warns on stderr (once) and is ignored — no raise."""
     monkeypatch.setenv(ops.ENV_VAR, "bogus")
-    with pytest.raises(ValueError):
-        ops.resolve_backend()
+    monkeypatch.setattr(ops, "_env_warned", False)
+    assert ops.resolve_backend() == "pallas"
+    assert ops.resolve_backend(default="ref") == "ref"
+    err = capsys.readouterr().err
+    assert err.count("ignoring REPRO_KERNEL_BACKEND='bogus'") == 1
+    # override still beats the (ignored) env value
+    ops.set_backend("ref")
+    assert ops.resolve_backend() == "ref"
+
+
+def test_dispatch_stats_counts_per_site_and_backend():
+    ops.reset_dispatch_stats()
+    ops.resolve_backend(site="ops.fedavg")
+    ops.resolve_backend("ref", site="ops.fedavg")
+    ops.resolve_backend("ref", site="ops.fedavg")
+    ops.resolve_backend(default="ref", site="server.fedavg_merge")
+    ops.resolve_backend()                      # no site: not counted
+    stats = ops.dispatch_stats()
+    assert stats == {"ops.fedavg": {"pallas": 1, "ref": 2},
+                     "server.fedavg_merge": {"ref": 1}}
+    ops.reset_dispatch_stats()
+    assert ops.dispatch_stats() == {}
 
 
 def test_model_wrappers_pin_to_reference():

@@ -1,0 +1,208 @@
+#!/usr/bin/env python
+"""Validate and render ``repro.obs/v1`` artifacts.
+
+Three modes over the BENCH/trace/events files the benchmarks emit:
+
+* ``--check a.json b.jsonl …`` — schema-validate every file (BENCH
+  artifacts via :func:`repro.obs.export.validate_artifact`, ``.jsonl``
+  event streams via :func:`~repro.obs.export.validate_events_jsonl`,
+  Chrome traces structurally) and exit non-zero listing every problem.
+  This is the CI gate after the benchmark smoke steps.
+* ``--table a.json …`` — print the markdown performance table the README
+  carries, one row per headline number per artifact.
+* ``--readme README.md a.json …`` — splice that table between the
+  ``<!-- obs:perf-table -->`` markers in the README, in place.
+
+Usage::
+
+    PYTHONPATH=src python tools/obs_report.py --check BENCH_*.json OBS_events.jsonl
+    PYTHONPATH=src python tools/obs_report.py --readme README.md BENCH_*.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.export import (SCHEMA, validate_artifact,       # noqa: E402
+                              validate_events_jsonl)
+
+START = "<!-- obs:perf-table:start -->"
+END = "<!-- obs:perf-table:end -->"
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def _check_trace(obj: object, path: str) -> list[str]:
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return [f"{path}: not a Chrome trace (no 'traceEvents')"]
+    evs = obj["traceEvents"]
+    if not isinstance(evs, list) or not evs:
+        return [f"{path}: empty traceEvents"]
+    problems = []
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            problems.append(f"{path}: traceEvents[{i}] missing ph/name")
+        elif ev["ph"] not in ("M", "i") and "ts" not in ev:
+            problems.append(f"{path}: traceEvents[{i}] missing ts")
+    return problems
+
+
+def check(paths: list[str]) -> int:
+    problems: list[str] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if not path.exists():
+            problems.append(f"{p}: missing")
+            continue
+        if path.suffix == ".jsonl":
+            problems += validate_events_jsonl(
+                path.read_text().splitlines(), path=p)
+            continue
+        try:
+            obj = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            problems.append(f"{p}: unparseable JSON ({e})")
+            continue
+        if isinstance(obj, dict) and "traceEvents" in obj:
+            problems += _check_trace(obj, p)
+        else:
+            problems += validate_artifact(obj, path=p)
+    if problems:
+        for problem in problems:
+            print(f"FAIL {problem}")
+        return 1
+    print(f"ok: {len(paths)} file(s) conform to {SCHEMA}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# rendering
+# ---------------------------------------------------------------------------
+
+def _rows_campaign(name: str, art: dict) -> list[tuple[str, str, str, str]]:
+    d = art["data"]
+    label = ("Table II campaign sweep" if art["kind"] == "campaign_sweep"
+             else "Stratified-fleet sweep (churn + tiered rates)")
+    sweep = (f"{d['scenarios']} campaigns x {d['max_rounds']} rounds")
+    rows = [(f"{label} ({sweep})",
+             "scan-fused engine vs Python-loop reference",
+             f"{d['fused_s']:.2f} s vs {d['reference_s']:.1f} s — "
+             f"**{d['speedup']:.0f}x**", name)]
+    by_backend = d.get("fused_s_by_backend", {})
+    if "pallas" in by_backend:
+        rows.append((f"FedAvg merge backends ({sweep})",
+                     '`backend="ref"` vs `backend="pallas"` (interpret)',
+                     f"{by_backend['ref']:.2f} s vs "
+                     f"{by_backend['pallas']:.2f} s",
+                     f"{name} `fused_s_by_backend`"))
+    if "obs_overhead_pct" in d:
+        rows.append((f"Metric-stream instrumentation ({sweep})",
+                     "in-carry obs buffers vs uninstrumented (bitwise-equal)",
+                     f"{d['obs_overhead_pct']:+.1f}% (bar ≤ 5%)",
+                     f"{name} `obs_overhead_pct`"))
+    return rows
+
+
+def _rows_kernels(name: str, art: dict) -> list[tuple[str, str, str, str]]:
+    ks = art["data"]["kernels"]
+    rows = []
+    if "poibin_dft" in ks:
+        k = ks["poibin_dft"]
+        rows.append(("Poisson-binomial batch (64 x N=50: pmf + all loo)",
+                     "`poibin_dft` kernel (interpret) vs jnp ref",
+                     f"{k['pallas_interpret']['p50_us'] / 1e3:.1f} ms vs "
+                     f"{k['ref']['p50_us'] / 1e3:.1f} ms", name))
+    rows.append((f"Kernel micro-bench suite ({len(ks)} kernels)",
+                 "pallas-interpret + ref p50/p95/mean per kernel",
+                 "both backends", name))
+    return rows
+
+
+def _rows_gap(name: str, art: dict) -> list[tuple[str, str, str, str]]:
+    rows = []
+    for kname, k in art["data"]["kernels"].items():
+        rows.append((
+            f"`{kname}` gap localization",
+            "compile-vs-execute + XLA cost_analysis, both backends",
+            f"pallas/ref p50 = **{k['pallas_over_ref_p50']:.1f}x**; "
+            f"pallas {k['pallas']['flops']:.1e} flops / "
+            f"{k['pallas']['bytes_accessed']:.1e} B vs "
+            f"ref {k['ref']['flops']:.1e} / {k['ref']['bytes_accessed']:.1e}",
+            name))
+    return rows
+
+
+def _rows_smoke(name: str, art: dict) -> list[tuple[str, str, str, str]]:
+    d = art["data"]
+    return [("Instrumented smoke campaign",
+             "metric stream + event taps + span trace, all on",
+             f"{d['events']} events, bitwise-equal outputs", name)]
+
+
+_RENDERERS = {
+    "campaign_sweep": _rows_campaign,
+    "hetero_campaign": _rows_campaign,
+    "kernels_micro": _rows_kernels,
+    "kernel_gap": _rows_gap,
+    "obs_smoke": _rows_smoke,
+}
+
+
+def render_table(paths: list[str]) -> str:
+    rows: list[tuple[str, str, str, str]] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.suffix != ".json" or not path.exists():
+            continue
+        art = json.loads(path.read_text())
+        renderer = _RENDERERS.get(art.get("kind"))
+        if renderer is None:
+            continue
+        rows += renderer(path.name, art)
+    lines = ["| hot path | program | measured | artifact |",
+             "|---|---|---|---|"]
+    for a, b, c, d in rows:
+        fname, _, field = d.partition(" ")
+        cell = f"`{fname}`" + (f" {field}" if field else "")
+        lines.append(f"| {a} | {b} | {c} | {cell} |")
+    return "\n".join(lines)
+
+
+def splice_readme(readme: str, paths: list[str]) -> int:
+    p = pathlib.Path(readme)
+    text = p.read_text()
+    if START not in text or END not in text:
+        print(f"FAIL {readme}: missing {START} / {END} markers")
+        return 1
+    head, rest = text.split(START, 1)
+    _, tail = rest.split(END, 1)
+    p.write_text(head + START + "\n" + render_table(paths) + "\n" + END + tail)
+    print(f"updated {readme} performance table from {len(paths)} artifact(s)")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--check", action="store_true",
+                    help="validate files against the obs schemas")
+    ap.add_argument("--readme", metavar="README",
+                    help="splice the rendered table into this file's markers")
+    ap.add_argument("paths", nargs="+",
+                    help="BENCH_*.json / TRACE_*.json / *.jsonl files")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(args.paths)
+    if args.readme:
+        return splice_readme(args.readme, args.paths)
+    print(render_table(args.paths))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
