@@ -86,6 +86,22 @@ def _hetero() -> None:
     heterogeneous_campaign.main([])
 
 
+@_suite("sharded", ("BENCH_sharded_campaign.json",))
+def _sharded() -> None:
+    # Runs in a subprocess: the XLA device count locks at the first in-process
+    # jax init, so the 8-device fake topology can't be set up from here.
+    import os
+    import subprocess
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    subprocess.run(
+        [sys.executable, "benchmarks/sharded_campaign.py"],
+        env=env, check=True)
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,

@@ -150,6 +150,67 @@ def _solve_vmapped(costs, gammas, d_tab, p0, *, damping, max_iters, tol):
     return jax.vmap(solve)(costs, gammas, d_tab, p0)
 
 
+# ---------------------------------------------------------------------------
+# scenario-mesh sharding: pad + NamedSharding inputs, out_shardings results
+# ---------------------------------------------------------------------------
+
+#: (surface, mesh, axis, static kwargs…) -> jitted sharded program. jax.jit
+#: caches per callable, so sharded programs must be built once per
+#: (surface, mesh) — a fresh jit per call would retrace every sweep.
+_SHARDED_PROGRAMS: dict = {}
+
+
+def _batch_sharding(mesh, batch_axis):
+    """NamedSharding + shard count for the scenario batch dim on ``mesh``.
+
+    Resolved through :func:`repro.launch.sharding.scenario_batch_spec`
+    (the MaxText-style rules engine), so the NE sweep places its batch on
+    the same ``("pod", "data")`` candidates as every other engine.
+    """
+    from jax.sharding import NamedSharding
+
+    from repro.launch.sharding import scenario_batch_spec, spec_axis_size
+
+    spec = scenario_batch_spec(0, mesh, axis=batch_axis)
+    return NamedSharding(mesh, spec), spec_axis_size(mesh, spec)
+
+
+def _shard_batch_args(mesh, batch_axis, batch, arrays):
+    """Edge-pad each leading-``batch`` array to shard-divisible size and
+    ``device_put`` it with the resolved NamedSharding."""
+    from repro.launch.sharding import pad_batch
+
+    sharding, shards = _batch_sharding(mesh, batch_axis)
+    return (tuple(jax.device_put(pad_batch(a, batch, shards), sharding)
+                  for a in arrays), sharding)
+
+
+def _sharded_program(key, builder):
+    prog = _SHARDED_PROGRAMS.get(key)
+    if prog is None:
+        prog = _SHARDED_PROGRAMS[key] = builder()
+    return prog
+
+
+def _require_ref_backend(mesh, backend, *, site: str) -> bool:
+    """Mesh sharding runs the vmapped jnp programs; resolve + guard.
+
+    Returns True when the pallas kernel path should be taken (only ever
+    with ``mesh=None``): the interpret-mode Pallas kernels are not
+    partitionable by GSPMD, so combining them with a scenario mesh raises
+    rather than silently gathering the batch onto one device.
+    """
+    from repro.kernels import ops as kernel_ops  # lazy: keep core light
+
+    pallas = kernel_ops.resolve_backend(
+        backend, default="ref", site=site) == "pallas"
+    if pallas and mesh is not None:
+        raise ValueError(
+            f"{site}: mesh sharding is only supported on the ref backend "
+            "(the interpret-mode Pallas kernels cannot be partitioned)")
+    return pallas
+
+
 @dataclasses.dataclass(frozen=True)
 class HeterogeneousSolution:
     """A vmapped batch of asymmetric-NE solves."""
@@ -204,6 +265,8 @@ def solve_heterogeneous(
     damping: float = 0.5,
     max_iters: int = 200,
     tol: float = 1e-5,
+    mesh=None,
+    batch_axis=None,
 ) -> HeterogeneousSolution:
     """Solve a batch of heterogeneous games in one jitted program.
 
@@ -219,11 +282,36 @@ def solve_heterogeneous(
         damping / max_iters / tol: Gauss-Seidel controls with the scalar
             solver's defaults and semantics (``iters`` counts round-robin
             sweeps; convergence is max per-node update < tol within a sweep).
+        mesh: optional :class:`jax.sharding.Mesh` — shard the scenario
+            batch over its data-parallel axes (``batch_axis`` overrides
+            the rules-table candidates). Arbitrary ``B`` is edge-padded to
+            shard-divisibility and results are sliced back; ``mesh=None``
+            (default) is the unchanged single-device program. Note the
+            batched while_loop runs until every lane (padding included)
+            converges, so wall-clock is the max over the shard.
     """
     costs, gammas, d_tab, p0 = _prepare_batch(costs, gammas, dur, p0)
-    p, conv, iters = _solve_vmapped(costs, gammas, d_tab, p0,
-                                    damping=float(damping),
-                                    max_iters=int(max_iters), tol=float(tol))
+    statics = (float(damping), int(max_iters), float(tol))
+    if mesh is None:
+        p, conv, iters = _solve_vmapped(costs, gammas, d_tab, p0,
+                                        damping=statics[0],
+                                        max_iters=int(max_iters),
+                                        tol=statics[2])
+    else:
+        b = costs.shape[0]
+        args, sharding = _shard_batch_args(
+            mesh, batch_axis, b, (costs, gammas, d_tab, p0))
+
+        def build():
+            solve = functools.partial(
+                _gs_fixed_point, damping=statics[0],
+                max_iters=int(max_iters), tol=statics[2])
+            return jax.jit(jax.vmap(solve), in_shardings=sharding,
+                           out_shardings=sharding)
+
+        prog = _sharded_program(("solve", mesh, batch_axis) + statics, build)
+        p, conv, iters = prog(*args)
+        p, conv, iters = p[:b], conv[:b], iters[:b]
     return HeterogeneousSolution(costs=costs, gammas=gammas, p=p,
                                  converged=conv, iters=iters)
 
@@ -290,6 +378,8 @@ def verify_equilibrium_batched(
     *,
     grid: int = 64,
     backend: str | None = None,
+    mesh=None,
+    batch_axis=None,
 ) -> jax.Array:
     """Max profitable unilateral deviation per scenario (0 at an exact NE).
 
@@ -300,16 +390,27 @@ def verify_equilibrium_batched(
 
     ``backend="pallas"`` computes the pmf/leave-one-out block in the fused
     :mod:`repro.kernels.poibin_dft` kernel (fp32 parity); the default
-    ``"ref"`` is the bitwise-unchanged vmapped jnp program.
+    ``"ref"`` is the bitwise-unchanged vmapped jnp program. ``mesh`` shards
+    the scenario batch (ref backend only; see :func:`solve_heterogeneous`).
     """
     costs, gammas, d_tab, p = _prepare_batch(costs, gammas, dur, p)
-    from repro.kernels import ops as kernel_ops  # lazy: keep core light
-
-    if kernel_ops.resolve_backend(
-            backend, default="ref", site="ne.verify_equilibrium_batched") == "pallas":
+    if _require_ref_backend(mesh, backend,
+                            site="ne.verify_equilibrium_batched"):
         return _verify_vmapped_pallas(costs, gammas, d_tab, p,
                                       grid=int(grid))
-    return _verify_vmapped(costs, gammas, d_tab, p, grid=int(grid))
+    if mesh is None:
+        return _verify_vmapped(costs, gammas, d_tab, p, grid=int(grid))
+    b = costs.shape[0]
+    args, sharding = _shard_batch_args(
+        mesh, batch_axis, b, (costs, gammas, d_tab, p))
+
+    def build():
+        return jax.jit(
+            jax.vmap(functools.partial(_verify_one, grid=int(grid))),
+            in_shardings=sharding, out_shardings=sharding)
+
+    prog = _sharded_program(("verify", mesh, batch_axis, int(grid)), build)
+    return prog(*args)[:b]
 
 
 # ---------------------------------------------------------------------------
@@ -336,20 +437,30 @@ def _social_cost_vmapped_pallas(costs, d_tab, p):
 
 def social_cost_batched(costs: jax.Array, dur: DurationModel | jax.Array,
                         p: jax.Array, *,
-                        backend: str | None = None) -> jax.Array:
+                        backend: str | None = None,
+                        mesh=None, batch_axis=None) -> jax.Array:
     """``Σ_i (E[D] + c_i p_i) = N·E[D] + Σ c_i p_i`` per scenario, ``(B,)``.
 
     ``backend="pallas"`` evaluates the batch's pmfs in the DFT kernel;
     the default ``"ref"`` keeps the vmapped convolution-recursion program
-    bitwise-unchanged.
+    bitwise-unchanged. ``mesh`` shards the scenario batch (ref backend
+    only; see :func:`solve_heterogeneous`).
     """
     costs, _, d_tab, p = _prepare_batch(costs, jnp.zeros_like(costs), dur, p)
-    from repro.kernels import ops as kernel_ops  # lazy: keep core light
-
-    if kernel_ops.resolve_backend(
-            backend, default="ref", site="ne.social_cost_batched") == "pallas":
+    if _require_ref_backend(mesh, backend, site="ne.social_cost_batched"):
         return _social_cost_vmapped_pallas(costs, d_tab, p)
-    return _social_cost_vmapped(costs, d_tab, p)
+    if mesh is None:
+        return _social_cost_vmapped(costs, d_tab, p)
+    b = costs.shape[0]
+    args, sharding = _shard_batch_args(mesh, batch_axis, b,
+                                       (costs, d_tab, p))
+
+    def build():
+        return jax.jit(jax.vmap(_social_cost_one),
+                       in_shardings=sharding, out_shardings=sharding)
+
+    prog = _sharded_program(("social_cost", mesh, batch_axis), build)
+    return prog(*args)[:b]
 
 
 def _planner_one(costs, d_tab, p0, *, rounds):
@@ -397,6 +508,8 @@ def planner_batched(
     p0: jax.Array,
     *,
     rounds: int = 20,
+    mesh=None,
+    batch_axis=None,
 ) -> jax.Array:
     """Heterogeneity-aware planner: jitted round-robin coordinate descent.
 
@@ -405,10 +518,23 @@ def planner_batched(
     ``N·∂E[D]/∂p_i + c_i``), which reproduces the scalar planner's
     grid-argmin fixed points without any grid. Monotone non-increasing, so
     started from an NE profile its cost lower-bounds the NE cost — the PoA
-    denominator. Returns ``(B, N)`` profiles.
+    denominator. Returns ``(B, N)`` profiles. ``mesh`` shards the scenario
+    batch (see :func:`solve_heterogeneous`).
     """
     costs, _, d_tab, p0 = _prepare_batch(costs, jnp.zeros_like(costs), dur, p0)
-    return _planner_vmapped(costs, d_tab, p0, rounds=int(rounds))
+    if mesh is None:
+        return _planner_vmapped(costs, d_tab, p0, rounds=int(rounds))
+    b = costs.shape[0]
+    args, sharding = _shard_batch_args(mesh, batch_axis, b,
+                                       (costs, d_tab, p0))
+
+    def build():
+        return jax.jit(
+            jax.vmap(functools.partial(_planner_one, rounds=int(rounds))),
+            in_shardings=sharding, out_shardings=sharding)
+
+    prog = _sharded_program(("planner", mesh, batch_axis, int(rounds)), build)
+    return prog(*args)[:b]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -435,6 +561,8 @@ def poa_report(
     verify_grid: int = 64,
     planner_rounds: int = 20,
     backend: str | None = None,
+    mesh=None,
+    batch_axis=None,
     **solver_kwargs,
 ) -> HeterogeneousPoA:
     """Solve, certify, and benchmark a batch of heterogeneous scenarios.
@@ -442,14 +570,21 @@ def poa_report(
     ``backend`` routes the certification and social-cost evaluations
     through :mod:`repro.kernels.poibin_dft` when ``"pallas"`` (the NE
     solve and planner stay jnp — their sweeps are sequential per node);
-    the default ``"ref"`` is bitwise-unchanged.
+    the default ``"ref"`` is bitwise-unchanged. ``mesh``/``batch_axis``
+    shard every stage's scenario batch over the mesh's data axes (ref
+    backend only; see :func:`solve_heterogeneous`).
     """
-    sol = solve_heterogeneous(costs, gammas, dur, **solver_kwargs)
+    sol = solve_heterogeneous(costs, gammas, dur, mesh=mesh,
+                              batch_axis=batch_axis, **solver_kwargs)
     dev = verify_equilibrium_batched(sol.costs, sol.gammas, dur, sol.p,
-                                     grid=verify_grid, backend=backend)
-    ne_cost = social_cost_batched(sol.costs, dur, sol.p, backend=backend)
-    opt_p = planner_batched(sol.costs, dur, sol.p, rounds=planner_rounds)
-    opt_cost = social_cost_batched(sol.costs, dur, opt_p, backend=backend)
+                                     grid=verify_grid, backend=backend,
+                                     mesh=mesh, batch_axis=batch_axis)
+    ne_cost = social_cost_batched(sol.costs, dur, sol.p, backend=backend,
+                                  mesh=mesh, batch_axis=batch_axis)
+    opt_p = planner_batched(sol.costs, dur, sol.p, rounds=planner_rounds,
+                            mesh=mesh, batch_axis=batch_axis)
+    opt_cost = social_cost_batched(sol.costs, dur, opt_p, backend=backend,
+                                   mesh=mesh, batch_axis=batch_axis)
     poa = ne_cost / jnp.maximum(opt_cost, 1e-12)
     return HeterogeneousPoA(solution=sol, deviation=dev, ne_cost=ne_cost,
                             opt_p=opt_p, opt_cost=opt_cost, poa=poa)

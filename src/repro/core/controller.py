@@ -258,6 +258,8 @@ class ParticipationController:
         gamma_max: float = 5.0,
         coarse: int = 16,
         cert_tol: float = 1e-3,
+        mesh=None,
+        batch_axis=None,
         **solver_kwargs,
     ) -> jax.Array:
         """Per-node participation matrices for heterogeneous scenario sweeps.
@@ -291,6 +293,12 @@ class ParticipationController:
                 controller's γ / c spread uniformly).
             cert_tol: max profitable unilateral deviation for a fixed point
                 to count as a certified NE in the multistart selection.
+            mesh / batch_axis: optional :class:`jax.sharding.Mesh` (and
+                mesh-axis override) sharding every stage's scenario batch
+                over the mesh's data axes — see
+                :func:`repro.core.asymmetric_batched.solve_heterogeneous`.
+                ``mesh=None`` keeps the single-device programs
+                bitwise-unchanged.
             solver_kwargs: forwarded to the asymmetric engine (``damping``,
                 ``max_iters``, ``tol``).
 
@@ -321,7 +329,8 @@ class ParticipationController:
             grid = jnp.linspace(0.0, gamma_max, coarse)
             g_all = (g[:, None, :] + grid[None, :, None]).reshape(-1, n)
             c_all = jnp.repeat(c, coarse, axis=0)
-            rep = poa_report(c_all, g_all, dur, **solver_kwargs)
+            rep = poa_report(c_all, g_all, dur, mesh=mesh,
+                             batch_axis=batch_axis, **solver_kwargs)
             poa = jnp.where(rep.solution.converged, rep.poa,
                             jnp.inf).reshape(b, coarse)
             ok = poa <= self.target_poa + 1e-9
@@ -337,10 +346,12 @@ class ParticipationController:
             c_all = jnp.tile(c, (s, 1))
             g_all = jnp.tile(g, (s, 1))
             p0 = jnp.repeat(starts, b)[:, None] * jnp.ones((1, n))
-            sol = solve_heterogeneous(c_all, g_all, dur, p0=p0,
-                                      **solver_kwargs)
-            dev = verify_equilibrium_batched(c_all, g_all, dur, sol.p)
-            cost = social_cost_batched(c_all, dur, sol.p)
+            sol = solve_heterogeneous(c_all, g_all, dur, p0=p0, mesh=mesh,
+                                      batch_axis=batch_axis, **solver_kwargs)
+            dev = verify_equilibrium_batched(c_all, g_all, dur, sol.p,
+                                             mesh=mesh, batch_axis=batch_axis)
+            cost = social_cost_batched(c_all, dur, sol.p, mesh=mesh,
+                                       batch_axis=batch_axis)
             valid = (sol.converged & (dev <= cert_tol)).reshape(s, b)
             cost = cost.reshape(s, b)
             if mode == "ne_worst":
@@ -354,8 +365,10 @@ class ParticipationController:
             return p_all[pick, jnp.arange(b)]
 
         if mode == "centralized":
-            sol = solve_heterogeneous(c, g, dur, **solver_kwargs)
-            return planner_batched(c, dur, sol.p)
+            sol = solve_heterogeneous(c, g, dur, mesh=mesh,
+                                      batch_axis=batch_axis, **solver_kwargs)
+            return planner_batched(c, dur, sol.p, mesh=mesh,
+                                   batch_axis=batch_axis)
 
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 from repro.core.aoi import AoITracker
 from repro.core.energy import J_PER_WH, EnergyLedger, EnergyParams
 from repro.federated.client import make_local_train
+from repro.federated.participation import round_mask
 from repro.federated.server import ConvergenceTracker, fedavg_merge
 from repro.obs import ObsConfig
 from repro.obs.metrics import MetricStream, merge_norm
@@ -185,6 +186,8 @@ def build_campaign(
     churn: bool = False,
     backend: str | None = None,
     obs: ObsConfig | None = None,
+    mesh=None,
+    batch_axis=None,
 ):
     """Compile the campaign engine for one task definition.
 
@@ -220,7 +223,30 @@ def build_campaign(
     batched scan state (dict of params/ledger/tracker/aoi/accs/ks, plus
     present/present_counts under churn and metrics under obs). Use
     :func:`run_campaigns` for the friendly wrapper.
+
+    ``mesh``/``batch_axis`` (static) place the scenario batch axis of every
+    input and result leaf on a device mesh: the program is jitted with
+    ``in_shardings``/``out_shardings`` resolved through the
+    :mod:`repro.launch.sharding` rules engine
+    (:func:`~repro.launch.sharding.scenario_batch_spec`; ``batch_axis``
+    overrides the ``("pod", "data")`` candidate order), so the vmapped
+    scenario sweep partitions across devices — each device runs its block
+    of campaigns with no cross-scenario collectives. ``mesh=None`` (the
+    default) builds the exact single-device program as before.  Callers
+    must pass batch sizes divisible by the mesh axis
+    (:func:`run_campaigns` pads arbitrary ``B`` and slices results back).
     """
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+
+        from repro.launch.sharding import scenario_batch_spec
+
+        # batch=0 sentinel: resolve the spec by axis name only (divisibility
+        # is the caller's padding contract, not re-checked per trace).
+        axes = batch_axis
+        spec = scenario_batch_spec(0, mesh, axis=axes) if axes is not None \
+            else scenario_batch_spec(0, mesh)
+        batch_sharding = NamedSharding(mesh, spec)
     n = fl.n_clients
     train_one = make_local_train(loss_fn, opt)
     record_metrics = obs is not None and obs.record_metrics
@@ -230,7 +256,7 @@ def build_campaign(
     def train_round(params, p_vec, mask_rng, r):
         """Shared round body: masks → local training → merge → validation."""
         with jax.named_scope("campaign/masks"):
-            mask = jax.random.bernoulli(mask_rng, p_vec, (n,))
+            mask = round_mask(mask_rng, p_vec)
         with jax.named_scope("campaign/local_train"):
             batches = jax.vmap(
                 lambda cid: client_data(cid, r, fl.batch_per_client,
@@ -321,7 +347,11 @@ def build_campaign(
                         accuracy=new_acc)
                     new_carry += (_tree_select(active, recorded, stream),)
             if emit_events:
-                sink.tap("round", scenario=scenario_id, round=r,
+                # valid= drops padding-replica lanes (scenario_id < 0) the
+                # mesh path adds to fill devices — their events would
+                # double-count real scenarios (tests/test_obs.py).
+                sink.tap("round", valid=scenario_id >= 0,
+                         scenario=scenario_id, round=r,
                          active=active, participants=k, accuracy=new_acc)
             return new_carry, (new_acc, k)
 
@@ -335,22 +365,33 @@ def build_campaign(
             out["metrics"] = final[-1]
         if emit_events:
             tracker = out["tracker"]
-            sink.tap("campaign", scenario=scenario_id,
+            sink.tap("campaign", valid=scenario_id >= 0,
+                     scenario=scenario_id,
                      converged_at=tracker.converged_at,
                      energy_j=out["ledger"].total_j)
         return out
 
+    def _jit(vfn):
+        if mesh is None:
+            return jax.jit(vfn)
+        # One sharding as a pytree prefix: every input/result leaf carries
+        # the scenario batch as its leading dim, so the single
+        # ``batch_sharding`` places them all (GSPMD partitions the vmapped
+        # program along it — no cross-scenario collectives exist).
+        return jax.jit(vfn, in_shardings=batch_sharding,
+                       out_shardings=batch_sharding)
+
     if churn and emit_events:
-        return jax.jit(jax.vmap(one_campaign))
+        return _jit(jax.vmap(one_campaign))
     if churn:
-        return jax.jit(jax.vmap(
+        return _jit(jax.vmap(
             lambda p, s, ep, ei, ar, de, pr: one_campaign(
                 p, s, ep, ei, ar, de, pr)))
     if emit_events:
-        return jax.jit(jax.vmap(
+        return _jit(jax.vmap(
             lambda p, s, ep, ei, sid: one_campaign(
                 p, s, ep, ei, scenario_id=sid)))
-    return jax.jit(jax.vmap(
+    return _jit(jax.vmap(
         lambda p, s, ep, ei: one_campaign(p, s, ep, ei)))
 
 
@@ -414,6 +455,8 @@ def run_campaigns(
     engine: Callable | None = None,
     backend: str | None = None,
     obs: ObsConfig | None = None,
+    mesh=None,
+    batch_axis=None,
 ) -> CampaignResult:
     """Run B FedAvg campaigns as one jitted scan+vmap program.
 
@@ -452,6 +495,19 @@ def run_campaigns(
             uninstrumented program. A prebuilt ``engine`` bakes in its own
             ``obs``, and this call's must match it (the engine signature
             and outputs depend on it).
+        mesh: optional :class:`jax.sharding.Mesh`. Shards the scenario
+            batch axis across the mesh's data-parallel axes: inputs are
+            ``jax.device_put`` with a ``NamedSharding`` resolved through
+            the :mod:`repro.launch.sharding` rules engine, the engine is
+            jitted with matching ``out_shardings``, and arbitrary ``B`` is
+            edge-padded to the next multiple of the axis size — every
+            result leaf (ledger, AoI, metrics, histories) is sliced back
+            to ``B`` rows, so padding replicas never reach accounting.
+            ``None`` (the default) is the bitwise-pinned single-device
+            path (``tests/test_sharded_campaign.py``). A prebuilt
+            ``engine`` must have been built with the same ``mesh``.
+        batch_axis: mesh axis name (or tuple) for the batch dim, default
+            the rules table's ``("pod", "data")`` preference.
 
     Returns:
         A :class:`CampaignResult`; per-node realized splits live in
@@ -480,13 +536,33 @@ def run_campaigns(
 
     fn = engine if engine is not None else build_campaign(
         fl, init_params, loss_fn, eval_fn, client_data, val_batch, opt,
-        churn=churn is not None, backend=backend, obs=obs)
+        churn=churn is not None, backend=backend, obs=obs,
+        mesh=mesh, batch_axis=batch_axis)
     call_args = [p_arr, seeds, e_part, e_idle]
     if churn is not None:
         call_args.extend(churn.as_arrays(batch, n))
     if obs is not None and obs.emit_events:
         call_args.append(jnp.arange(batch, dtype=jnp.int32))
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+
+        from repro.launch.sharding import (pad_batch, scenario_batch_spec,
+                                           spec_axis_size)
+
+        spec = scenario_batch_spec(0, mesh, axis=batch_axis)
+        shards = spec_axis_size(mesh, spec)
+        call_args = [pad_batch(a, batch, shards) for a in call_args]
+        if obs is not None and obs.emit_events and call_args[-1].shape[0] != batch:
+            # Padding lanes get scenario_id = -1: the event taps carry a
+            # validity mask and the sink drops their records.
+            call_args[-1] = call_args[-1].at[batch:].set(-1)
+        sharding = NamedSharding(mesh, spec)
+        call_args = [jax.device_put(a, sharding) for a in call_args]
     out = fn(*call_args)
+    if mesh is not None and next(iter(jax.tree.leaves(out))).shape[0] != batch:
+        # Drop the padding replicas from every result leaf — the validity
+        # mask of the pad-to-divisible contract.
+        out = jax.tree.map(lambda leaf: leaf[:batch], out)
 
     tracker, ledger, aoi = out["tracker"], out["ledger"], out["aoi"]
     converged = tracker.converged_at >= 0

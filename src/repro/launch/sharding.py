@@ -19,8 +19,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["Rules", "TRAIN_RULES", "DECODE_RULES", "resolve_specs",
-           "batch_rules_axes"]
+__all__ = ["Rules", "TRAIN_RULES", "DECODE_RULES", "SCENARIO_RULES",
+           "resolve_specs", "batch_rules_axes", "scenario_batch_spec",
+           "spec_axis_size", "pad_batch", "padded_size"]
 
 # a candidate is a mesh axis name, a tuple of axis names, or None
 Candidate = Any
@@ -167,6 +168,73 @@ DECODE_RULES = Rules(table={
 def batch_rules_axes(mesh: Mesh) -> tuple:
     """The data-parallel axes present in this mesh."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# --------------------------------------------------------------------------
+# scenario-batch rules (the campaign / NE sweep engines)
+# --------------------------------------------------------------------------
+
+# The batched game/campaign engines are embarrassingly parallel along their
+# scenario axis: every per-scenario dimension (nodes, rounds, pmf support)
+# stays on-device and only 'scenario' goes to the data-parallel axes. The
+# same resolver that places model dims (above) places the sweep batch.
+SCENARIO_RULES = Rules(table={
+    "scenario": [("pod", "data")],
+    "node": [None],
+    "round": [None],
+})
+
+
+def scenario_batch_spec(batch: int, mesh: Mesh, *,
+                        axis: str | Sequence[str] | None = None,
+                        rules: Rules | None = None) -> P:
+    """PartitionSpec placing a scenario batch dim of size ``batch``.
+
+    Resolved through the rules engine (first candidate whose mesh size
+    divides ``batch`` wins — callers pad to divisibility first, see
+    :func:`padded_size`). ``axis`` overrides the candidate list with a
+    single mesh axis name (or tuple of names); default is
+    :data:`SCENARIO_RULES`'s ``("pod", "data")`` preference.
+    """
+    if rules is None:
+        table = dict(SCENARIO_RULES.table)
+        if axis is not None:
+            table["scenario"] = [tuple(axis) if isinstance(axis, (tuple, list))
+                                 else axis]
+        rules = Rules(table=table)
+    return resolve_one((batch,), ("scenario",), mesh, rules,
+                       used_note="scenario_batch")
+
+
+def spec_axis_size(mesh: Mesh, spec: P) -> int:
+    """Total number of shards the leading dim of ``spec`` is split into."""
+    if not len(spec):
+        return 1
+    return _axis_size(mesh, spec[0])
+
+
+def padded_size(batch: int, multiple: int) -> int:
+    """Smallest ``B' >= batch`` divisible by ``multiple``."""
+    if multiple <= 1:
+        return batch
+    return ((batch + multiple - 1) // multiple) * multiple
+
+
+def pad_batch(x, batch: int, multiple: int):
+    """Edge-pad the leading (batch) dim of ``x`` up to a multiple.
+
+    Padding rows replicate the last valid scenario — real, finite inputs,
+    so the padded lanes trace the same program without NaN hazards — and
+    callers slice every result back to ``batch`` rows (the validity mask),
+    so replica lanes can never leak into ledgers/metrics/events.
+    """
+    import jax.numpy as jnp
+
+    target = padded_size(batch, multiple)
+    if target == batch:
+        return x
+    pad = [(0, target - batch)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, mode="edge")
 
 
 # --------------------------------------------------------------------------

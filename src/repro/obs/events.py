@@ -95,7 +95,7 @@ class EventSink:
     # -- inside-jit ---------------------------------------------------------
 
     def tap(self, event: str, /, *, ordered: bool = False,
-            **arrays: Any) -> None:
+            valid: Any = None, **arrays: Any) -> None:
         """Stage an event emission inside a traced program.
 
         Args:
@@ -105,6 +105,13 @@ class EventSink:
                 strict intra-program ordering guarantees, but illegal
                 under ``vmap`` — batched call sites use the default and
                 rely on ``seq`` stamped at host arrival.
+            valid: optional traced boolean *validity mask*. Events whose
+                mask lands False on the host are dropped before emission —
+                the hook the mesh-sharded campaign engine uses so the
+                edge-padding replica lanes (scenario_id stamped -1) never
+                appear in the event stream. ``None`` (default) emits
+                unconditionally and stages the identical callback as
+                before.
             arrays: traced (or concrete) values; they land on the host as
                 numpy and are stored as scalars/lists.
 
@@ -116,11 +123,24 @@ class EventSink:
 
         names = tuple(arrays)
 
-        def _cb(*vals):
+        if valid is None:
+            def _cb(*vals):
+                self.emit(event, **{n: _jsonable(v)
+                                    for n, v in zip(names, vals)})
+
+            jax.debug.callback(_cb, *arrays.values(), ordered=ordered)
+            return
+
+        def _cb_masked(ok, *vals):
+            import numpy as np
+
+            if not bool(np.asarray(ok)):
+                return
             self.emit(event, **{n: _jsonable(v)
                                 for n, v in zip(names, vals)})
 
-        jax.debug.callback(_cb, *arrays.values(), ordered=ordered)
+        jax.debug.callback(_cb_masked, valid, *arrays.values(),
+                           ordered=ordered)
 
     # -- readout ------------------------------------------------------------
 

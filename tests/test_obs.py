@@ -94,6 +94,29 @@ def test_events_per_element_under_vmap():
         assert e["y"] == pytest.approx(e["tag"] * 2.0)
 
 
+def test_tap_valid_mask_filters_events():
+    """tap(valid=...) drops events whose mask lands False — the hook the
+    mesh path uses so padding-replica lanes (scenario_id = -1) never reach
+    the stream."""
+    sink = EventSink()
+
+    def one(sid, x):
+        sink.tap("elem", valid=sid >= 0, sid=sid, x=x)
+        return x * 2
+
+    jax.block_until_ready(
+        jax.jit(jax.vmap(one))(jnp.asarray([0, -1, 2, -1]),
+                               jnp.arange(4.0)))
+    sink.flush()
+    assert sorted(e["sid"] for e in sink.events) == [0, 2]
+    # valid=None (the default) still emits unconditionally
+    sink2 = EventSink()
+    jax.block_until_ready(
+        jax.jit(lambda x: (sink2.tap("e", x=x), x)[1])(jnp.float32(1)))
+    sink2.flush()
+    assert len(sink2.events) == 1
+
+
 def test_disabled_sink_stages_nothing():
     """A disabled sink's tap must not even enter the traced program."""
     sink = EventSink(enabled=False)
@@ -256,6 +279,49 @@ def test_dispatch_stats_from_real_call_sites():
     assert stats["ops.poibin_pmf"] == {"pallas": 1}
     ops.reset_dispatch_stats()
     assert ops.dispatch_stats() == {}
+
+
+def test_dispatch_counts_once_under_shard_map():
+    """Per-call-site counters are trace-time: a shard_map body traces once,
+    so the count must be 1 — not once per device replica. Runs over every
+    device the process has (8 in the multi-device CI job)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.federated.distributed import _shard_map
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+
+    def body(x):
+        ops.resolve_backend(None, default="ref", site="test.shard_map_site")
+        return x * 2
+
+    fn = _shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    ops.reset_dispatch_stats()
+    x = jnp.arange(jax.device_count() * 2.0)
+    jax.block_until_ready(jax.jit(fn)(x))
+    assert ops.dispatch_stats()["test.shard_map_site"] == {"ref": 1}
+    ops.reset_dispatch_stats()
+
+
+def test_metrics_and_dispatch_once_under_mesh(small_campaign):
+    """The sharded campaign engine: MetricStream bitwise vs unsharded and
+    the merge dispatch counter counting the trace once (no per-replica
+    double-count)."""
+    from jax.sharding import Mesh
+
+    task, fl, ps, base = small_campaign
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    ref = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                        obs=ObsConfig(enabled=True))
+    ops.reset_dispatch_stats()
+    res = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                        mesh=mesh, obs=ObsConfig(enabled=True))
+    assert ops.dispatch_stats()["server.fedavg_merge"] == {"ref": 1}
+    ops.reset_dispatch_stats()
+    for a, b in zip(jax.tree.leaves(res.metrics), jax.tree.leaves(ref.metrics)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(res.metrics.cursor),
+                                  np.asarray(base.rounds))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,46 @@
+"""Hypothesis property: sharded NE solves are bitwise-equal to unsharded.
+
+Random (B, N, device_count) triples through
+:func:`repro.core.asymmetric_batched.solve_heterogeneous` — the mesh path
+pads to shard-divisibility, and per-scenario programs are independent, so
+every profile/flag/iteration count must match the single-device engine
+exactly. Device counts above 1 are only drawn when the process actually
+has the devices (the multi-device CI job runs with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die, without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.core  # noqa: F401  (enables x64)
+from jax.sharding import Mesh
+from repro.core.asymmetric_batched import solve_heterogeneous
+from repro.core.duration import paper_duration_model
+
+DEVICES = jax.device_count()
+
+
+@settings(max_examples=20)
+@given(b=st.integers(1, 8), n=st.integers(2, 5),
+       k=st.sampled_from([k for k in (1, 2, 4, 8) if k <= DEVICES]),
+       seed=st.integers(0, 2 ** 16))
+def test_property_sharded_solve_bitwise(b, n, k, seed):
+    """Any (B, N) batch on any available device count solves bitwise-equal
+    to the single-device engine, divisible or not."""
+    rng = np.random.default_rng(seed)
+    costs = jnp.asarray(rng.uniform(0.3, 3.0, (b, n)))
+    gammas = jnp.asarray(rng.uniform(0.0, 2.0, (b, n)))
+    dur = dataclasses.replace(paper_duration_model(), n_nodes=n)
+    mesh = Mesh(np.array(jax.devices()[:k]), ("data",))
+    ref = solve_heterogeneous(costs, gammas, dur)
+    sh = solve_heterogeneous(costs, gammas, dur, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ref.p), np.asarray(sh.p))
+    np.testing.assert_array_equal(np.asarray(ref.converged),
+                                  np.asarray(sh.converged))
+    np.testing.assert_array_equal(np.asarray(ref.iters), np.asarray(sh.iters))

@@ -1,0 +1,215 @@
+"""Sharded-vs-unsharded equivalence suite (the tentpole contract).
+
+Two pins, mirroring PR 5's ``backend="ref"`` contract style:
+
+* ``mesh=None`` (and its degenerate cousin, a 1-device mesh) stays
+  bitwise-equal to the PR 6 engines — these cases run in the tier-1 suite
+  on a single device;
+* on a faked 8-device mesh (``XLA_FLAGS=--xla_force_host_platform_
+  device_count=8`` — the dedicated multi-device CI job) the sharded
+  engines reproduce the single-device results: bitwise for the
+  ledger/masks/NE profiles (per-scenario programs are independent, so
+  GSPMD introduces no cross-scenario reductions), ≤2e-6 for merged
+  params, including batch sizes not divisible by the device count.
+
+The hypothesis property sweeps random (B, N, device_count) triples through
+the NE engine; per-example device counts only exceed 1 when the process
+actually has the devices.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.asymmetric_batched import poa_report, solve_heterogeneous
+from repro.core.controller import ParticipationController
+from repro.core.duration import paper_duration_model
+from repro.federated.campaign import build_campaign, run_campaigns
+from repro.federated.simulation import FLConfig
+from repro.federated.tasks import synthetic_mlp_task
+from repro.obs import EventSink, ObsConfig
+from repro.optim import sgd
+
+DEVICES = jax.device_count()
+multidevice = pytest.mark.skipif(
+    DEVICES < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=8 (multi-device CI job)")
+
+
+def data_mesh(k: int) -> Mesh:
+    return Mesh(np.array(jax.devices()[:k]), ("data",))
+
+
+def _dur(n: int):
+    return dataclasses.replace(paper_duration_model(), n_nodes=n)
+
+
+def _scenarios(b: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    costs = jnp.asarray(rng.uniform(0.3, 3.0, (b, n)))
+    gammas = jnp.asarray(rng.uniform(0.0, 2.0, (b, n)))
+    return costs, gammas
+
+
+def _assert_campaigns_equal(a, b):
+    """Bitwise over every accounting output (the ledger/mask contract)."""
+    for name in ("k_history", "rounds", "converged_at", "acc_history",
+                 "energy_wh", "per_node_aoi", "participation_rate"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=name)
+    for la, lb in zip(jax.tree.leaves(a.ledger), jax.tree.leaves(b.ledger)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# tier-1 (single-device) pins
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def campaign_task():
+    task = synthetic_mlp_task()
+    fl = FLConfig(n_clients=5, local_steps=1, batch_per_client=8,
+                  max_rounds=6, target_acc=0.73, seed=3)
+    ps = jnp.asarray([0.3, 0.55, 0.8], jnp.float32)
+    base = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps)
+    return task, fl, ps, base
+
+
+def test_one_device_mesh_campaign_is_bitwise(campaign_task):
+    """A trivial 1-device mesh resolves to a replicated spec — the program
+    must equal the mesh=None engine bit for bit (the mesh=None default
+    itself is pinned by the whole pre-existing suite)."""
+    task, fl, ps, base = campaign_task
+    res = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                        mesh=data_mesh(1))
+    _assert_campaigns_equal(res, base)
+
+
+def test_one_device_mesh_ne_engine_is_bitwise():
+    costs, gammas, dur = *_scenarios(7, 6), _dur(6)
+    ref = poa_report(costs, gammas, dur)
+    sh = poa_report(costs, gammas, dur, mesh=data_mesh(1))
+    np.testing.assert_array_equal(np.asarray(ref.solution.p),
+                                  np.asarray(sh.solution.p))
+    for name in ("deviation", "ne_cost", "opt_p", "opt_cost", "poa"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, name)),
+                                      np.asarray(getattr(sh, name)),
+                                      err_msg=name)
+
+
+def test_mesh_rejects_pallas_backend():
+    costs, gammas, dur = *_scenarios(4, 5), _dur(5)
+    sol = solve_heterogeneous(costs, gammas, dur)
+    from repro.core.asymmetric_batched import verify_equilibrium_batched
+    with pytest.raises(ValueError, match="ref backend"):
+        verify_equilibrium_batched(costs, gammas, dur, sol.p,
+                                   backend="pallas", mesh=data_mesh(1))
+
+
+# ---------------------------------------------------------------------------
+# 8-device equivalence (multi-device CI job)
+# ---------------------------------------------------------------------------
+
+@multidevice
+@pytest.mark.parametrize("batch", [8, 11])
+def test_campaign_8dev_matches_single_device(campaign_task, batch):
+    """Divisible (8) and padded (11) batches over 8 devices; every
+    accounting output bitwise, merged params to 2e-6."""
+    task, fl, _, _ = campaign_task
+    ps = jnp.linspace(0.25, 0.85, batch).astype(jnp.float32)
+    ref = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps)
+    sh = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                       mesh=data_mesh(8))
+    _assert_campaigns_equal(sh, ref)
+
+
+@multidevice
+def test_campaign_8dev_param_leaves_close(campaign_task):
+    """Raw engine outputs: merged model params within 2e-6 of the
+    single-device run (8 scenarios land one-per-device)."""
+    task, fl, _, _ = campaign_task
+    ps = jnp.broadcast_to(
+        jnp.linspace(0.3, 0.8, 8, dtype=jnp.float32)[:, None],
+        (8, fl.n_clients))
+    seeds = jnp.full((8,), fl.seed, jnp.uint32)
+    rates = (jnp.full((8,), 1.0), jnp.full((8,), 0.1))
+    args = (fl, *task.campaign_args(), sgd(0.15))
+    ref_out = build_campaign(*args)(ps, seeds, *rates)
+    sh_out = build_campaign(*args, mesh=data_mesh(8))(ps, seeds, *rates)
+    for a, b in zip(jax.tree.leaves(ref_out["params"]),
+                    jax.tree.leaves(sh_out["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+@multidevice
+def test_campaign_8dev_obs_padding_and_dispatch(campaign_task):
+    """B=11 over 8 devices pads 5 replica lanes: events must carry only the
+    11 real scenario ids, metrics must match the unsharded stream bitwise,
+    and the merge call-site dispatch counter must count the trace once —
+    not once per device replica."""
+    from repro.kernels import ops as kernel_ops
+
+    task, fl, _, _ = campaign_task
+    ps = jnp.linspace(0.25, 0.85, 11).astype(jnp.float32)
+
+    with EventSink() as sink:
+        obs = ObsConfig(enabled=True, events=True, sink=sink)
+        kernel_ops.reset_dispatch_stats()
+        sh = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                           mesh=data_mesh(8), obs=obs)
+        jax.block_until_ready(sh.acc_history)
+        sink.flush()
+        stats = kernel_ops.dispatch_stats()
+        evs = sink.events
+    assert stats["server.fedavg_merge"] == {"ref": 1}
+    rounds = [e for e in evs if e["event"] == "round"]
+    finals = [e for e in evs if e["event"] == "campaign"]
+    assert len(rounds) == 11 * fl.max_rounds
+    assert len(finals) == 11
+    assert sorted({e["scenario"] for e in rounds}) == list(range(11))
+
+    with EventSink() as sink2:
+        obs2 = ObsConfig(enabled=True, events=True, sink=sink2)
+        ref = run_campaigns(fl, *task.campaign_args(), sgd(0.15), ps,
+                            obs=obs2)
+        jax.block_until_ready(ref.acc_history)
+        sink2.flush()
+    assert len(sink2.events) == len(evs)
+    for a, b in zip(jax.tree.leaves(sh.metrics), jax.tree.leaves(ref.metrics)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@multidevice
+def test_ne_8dev_matches_single_device():
+    costs, gammas, dur = *_scenarios(13, 8, seed=1), _dur(8)
+    ref = solve_heterogeneous(costs, gammas, dur)
+    sh = solve_heterogeneous(costs, gammas, dur, mesh=data_mesh(8))
+    np.testing.assert_array_equal(np.asarray(ref.p), np.asarray(sh.p))
+    np.testing.assert_array_equal(np.asarray(ref.converged),
+                                  np.asarray(sh.converged))
+    np.testing.assert_array_equal(np.asarray(ref.iters), np.asarray(sh.iters))
+    rep_ref = poa_report(costs, gammas, dur)
+    rep_sh = poa_report(costs, gammas, dur, mesh=data_mesh(8))
+    for name in ("deviation", "ne_cost", "opt_p", "opt_cost", "poa"):
+        np.testing.assert_array_equal(np.asarray(getattr(rep_ref, name)),
+                                      np.asarray(getattr(rep_sh, name)),
+                                      err_msg=name)
+
+
+@multidevice
+def test_controller_8dev_passthrough():
+    n = 6
+    costs, gammas, dur = *_scenarios(9, n, seed=2), _dur(n)
+    ctrl = ParticipationController(n_nodes=n, gamma=1.0, cost=1.5,
+                                   duration_model=dur)
+    for mode in ("ne", "ne_worst", "centralized"):
+        ref = ctrl.solve_batched_heterogeneous(gammas, costs, mode)
+        sh = ctrl.solve_batched_heterogeneous(gammas, costs, mode,
+                                              mesh=data_mesh(8))
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(sh),
+                                      err_msg=mode)

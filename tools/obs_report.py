@@ -32,6 +32,8 @@ from repro.obs.export import (SCHEMA, validate_artifact,       # noqa: E402
 
 START = "<!-- obs:perf-table:start -->"
 END = "<!-- obs:perf-table:end -->"
+SCALING_START = "<!-- obs:scaling-table:start -->"
+SCALING_END = "<!-- obs:scaling-table:end -->"
 
 
 # ---------------------------------------------------------------------------
@@ -145,12 +147,32 @@ def _rows_smoke(name: str, art: dict) -> list[tuple[str, str, str, str]]:
              f"{d['events']} events, bitwise-equal outputs", name)]
 
 
+def _rows_sharded(name: str, art: dict) -> list[tuple[str, str, str, str]]:
+    d = art["data"]
+    ne_top = d["ne"]["scaling"][-1]
+    eq = d["equivalence"]
+    return [
+        (f"Mesh-sharded NE sweep ({ne_top['scenarios']:,} scenarios, "
+         f"N={d['ne']['n_nodes']})",
+         f"`solve_heterogeneous(mesh=...)` on {ne_top['devices']} devices",
+         f"{ne_top['warm_s']:.1f} s — {ne_top['throughput_per_s']:,.0f} "
+         f"scen/s, weak-scaling eff {ne_top['efficiency']:.2f}", name),
+        (f"Sharded == single-device contract (B={eq['scenarios']}, "
+         f"non-divisible)",
+         "`run_campaigns(mesh=...)` vs unsharded engine",
+         f"ledger bitwise={eq['ledger_bitwise']}, params max|diff| "
+         f"{eq['params_max_abs_diff']:.1e} (bar "
+         f"{eq['params_tolerance']:.0e})", name),
+    ]
+
+
 _RENDERERS = {
     "campaign_sweep": _rows_campaign,
     "hetero_campaign": _rows_campaign,
     "kernels_micro": _rows_kernels,
     "kernel_gap": _rows_gap,
     "obs_smoke": _rows_smoke,
+    "sharded_campaign": _rows_sharded,
 }
 
 
@@ -174,15 +196,55 @@ def render_table(paths: list[str]) -> str:
     return "\n".join(lines)
 
 
+def render_scaling_table(paths: list[str]) -> str | None:
+    """Weak-scaling table from a ``sharded_campaign`` artifact, or None."""
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.suffix != ".json" or not path.exists():
+            continue
+        art = json.loads(path.read_text())
+        if art.get("kind") != "sharded_campaign":
+            continue
+        d = art["data"]
+        lines = ["| devices | campaigns | campaigns/s | NE scenarios "
+                 "| NE scen/s | NE per-device | NE efficiency |",
+                 "|---|---|---|---|---|---|---|"]
+        for c_row, n_row in zip(d["campaign"]["scaling"], d["ne"]["scaling"]):
+            lines.append(
+                f"| {n_row['devices']} | {c_row['scenarios']} "
+                f"| {c_row['throughput_per_s']:,.1f} "
+                f"| {n_row['scenarios']:,} "
+                f"| {n_row['throughput_per_s']:,.0f} "
+                f"| {n_row['per_device_per_s']:,.0f} "
+                f"| {n_row['efficiency']:.2f} |")
+        lines.append(
+            f"\nEquivalence on {d['devices']} faked CPU devices "
+            f"(B={d['equivalence']['scenarios']}, non-divisible): ledger "
+            f"bitwise = {d['equivalence']['ledger_bitwise']}, params "
+            f"max|diff| = {d['equivalence']['params_max_abs_diff']:.1e} "
+            f"(bar {d['equivalence']['params_tolerance']:.0e}). "
+            f"Source: `{path.name}`.")
+        return "\n".join(lines)
+    return None
+
+
+def _splice(text: str, start: str, end: str, body: str) -> str:
+    head, rest = text.split(start, 1)
+    _, tail = rest.split(end, 1)
+    return head + start + "\n" + body + "\n" + end + tail
+
+
 def splice_readme(readme: str, paths: list[str]) -> int:
     p = pathlib.Path(readme)
     text = p.read_text()
     if START not in text or END not in text:
         print(f"FAIL {readme}: missing {START} / {END} markers")
         return 1
-    head, rest = text.split(START, 1)
-    _, tail = rest.split(END, 1)
-    p.write_text(head + START + "\n" + render_table(paths) + "\n" + END + tail)
+    text = _splice(text, START, END, render_table(paths))
+    scaling = render_scaling_table(paths)
+    if scaling is not None and SCALING_START in text and SCALING_END in text:
+        text = _splice(text, SCALING_START, SCALING_END, scaling)
+    p.write_text(text)
     print(f"updated {readme} performance table from {len(paths)} artifact(s)")
     return 0
 
