@@ -1,0 +1,161 @@
+"""Real-model FL campaigns: model-zoo tasks through the scan-fused engine.
+
+ISSUE 8 seam benchmark: wrap reduced registry models (a tiny transformer
+LM and the paper's ResNet-18 client) into :func:`repro.federated.tasks.
+model_task` and sweep B scenarios through :func:`run_campaigns`, measuring
+
+* **engine vs reference** — the scan-fused campaign against the Python
+  per-round reference loop (``--sample`` scenarios timed, extrapolated);
+* **per-model per-backend round wall-clock** — ``backend=None`` (the
+  model's plain jnp path), ``"ref"`` (kernels.ops jnp oracles) and
+  ``"pallas"`` (interpret mode on CPU: a harness check, not a TPU
+  projection) for kernel-backed families;
+* **non-iid vs iid split** — final accuracy and energy of Dirichlet
+  label-skewed shards vs the stateless iid streams, same scenarios.
+
+Emits ``name,us_per_call,derived`` CSV rows and ``BENCH_model_campaign.json``
+(``repro.obs/v1``; CI validates via ``tools/obs_report.py --check``).
+
+Run:  PYTHONPATH=src:. python benchmarks/model_campaign.py
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.configs import ARCHITECTURES
+from repro.federated.campaign import build_campaign, run_campaigns
+from repro.federated.simulation import FLConfig, run_simulation_reference
+from repro.federated.tasks import model_task
+from repro.obs.export import write_artifact
+from repro.optim import sgd
+from benchmarks.common import header, record
+
+
+def _model_cfgs() -> dict:
+    lm = dataclasses.replace(
+        ARCHITECTURES["stablelm-3b"].reduced(), n_layers=1, d_model=32,
+        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+    return {"transformer-lm": (lm, ["plain", "ref", "pallas"]),
+            "resnet18": (ARCHITECTURES["resnet18-cifar"].reduced(),
+                         ["plain"])}
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--seq", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=1.0,
+                    help="Dirichlet concentration of the non-iid split")
+    ap.add_argument("--sample", type=int, default=2,
+                    help="reference scenarios to time (extrapolated to all)")
+    ap.add_argument("--json", default="BENCH_model_campaign.json")
+    args = ap.parse_args(argv)
+
+    fl = FLConfig(n_clients=args.clients, local_steps=2, batch_per_client=4,
+                  max_rounds=args.rounds, seed=1)
+    opt = sgd(0.1)
+    ps = jnp.asarray(np.linspace(0.3, 0.9, args.scenarios), jnp.float32)
+    n_camp = args.scenarios * args.rounds
+    header()
+
+    models: dict = {}
+    for name, (cfg, backends) in _model_cfgs().items():
+        entry: dict = {"family": cfg.family, "backends": {}}
+
+        # -- per-backend scan-fused sweeps (iid streams) ---------------------
+        res_plain = None
+        for label in backends:
+            backend = None if label == "plain" else label
+            task = model_task(cfg, args.seq, backend=backend, val_size=32,
+                              data_seed=fl.seed)
+            engine = build_campaign(fl, *task.campaign_args(), opt)
+            t0 = time.perf_counter()
+            res = run_campaigns(fl, *task.campaign_args(), opt, ps,
+                                engine=engine)
+            jax.block_until_ready(res.energy_wh)
+            compile_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res = run_campaigns(fl, *task.campaign_args(), opt, ps,
+                                engine=engine)
+            jax.block_until_ready(res.energy_wh)
+            warm_s = time.perf_counter() - t0
+            entry["backends"][label] = {
+                "warm_s": round(warm_s, 4),
+                "round_ms": round(warm_s / n_camp * 1e3, 4),
+                "compile_s": round(compile_s, 2),
+            }
+            record(f"model_campaign.round[{name},{label}]",
+                   warm_s / n_camp * 1e6,
+                   f"{args.scenarios} campaigns x {args.rounds} rounds x "
+                   f"{args.clients} clients; compile {compile_s:.1f}s")
+            if label == "plain":
+                res_plain = res
+                task_plain = task
+
+        # -- engine vs Python reference loop ---------------------------------
+        idx = np.linspace(0, args.scenarios - 1,
+                          min(args.sample, args.scenarios)).astype(int)
+        t0 = time.perf_counter()
+        for i in idx:
+            run_simulation_reference(fl, *task_plain.campaign_args(), opt,
+                                     p=float(ps[i]))
+        t_ref = (time.perf_counter() - t0) * (args.scenarios / len(idx))
+        speedup = t_ref / entry["backends"]["plain"]["warm_s"]
+        entry["reference_s"] = round(t_ref, 2)
+        entry["reference_timing"] = f"extrapolated from {len(idx)}"
+        entry["speedup"] = round(speedup, 1)
+        record(f"model_campaign.speedup[{name}]", speedup,
+               f"scan-fused vs reference loop "
+               f"({entry['reference_timing']})")
+
+        # -- non-iid (Dirichlet) vs iid accuracy/energy split ----------------
+        task_skew = model_task(cfg, args.seq, partition="dirichlet",
+                               alpha=args.alpha, n_clients=args.clients,
+                               dataset_size=512, val_size=32,
+                               data_seed=fl.seed)
+        res_skew = run_campaigns(fl, *task_skew.campaign_args(), opt, ps)
+        jax.block_until_ready(res_skew.energy_wh)
+        split = {}
+        for tag, r in (("iid", res_plain), ("noniid", res_skew)):
+            split[tag] = {
+                "final_acc_mean": round(
+                    float(jnp.mean(r.acc_history[:, -1])), 4),
+                "energy_wh_mean": round(float(jnp.mean(r.energy_wh)), 6),
+            }
+        split["noniid"]["alpha"] = args.alpha
+        entry["iid_vs_noniid"] = split
+        record(f"model_campaign.noniid_gap[{name}]",
+               (split["iid"]["final_acc_mean"]
+                - split["noniid"]["final_acc_mean"]) * 1e4,
+               f"iid {split['iid']['final_acc_mean']:.3f} vs dirichlet"
+               f"(a={args.alpha}) {split['noniid']['final_acc_mean']:.3f} "
+               f"final acc (x1e-4)")
+        models[name] = entry
+
+    write_artifact(args.json, "model_campaign", {
+        "scenarios": args.scenarios,
+        "max_rounds": args.rounds,
+        "n_clients": args.clients,
+        "seq": args.seq,
+        "models": models,
+    }, seed=fl.seed, backend="ref")
+    for name, entry in models.items():
+        by = {k: v["round_ms"] for k, v in entry["backends"].items()}
+        print(f"\n{name}: {by} ms/round, speedup {entry['speedup']}x, "
+              f"iid/noniid final acc "
+              f"{entry['iid_vs_noniid']['iid']['final_acc_mean']}/"
+              f"{entry['iid_vs_noniid']['noniid']['final_acc_mean']}")
+    print(f"-> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

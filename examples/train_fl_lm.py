@@ -1,28 +1,36 @@
-"""End-to-end driver: participatory federated training of a ~100M LM.
+"""End-to-end driver: participatory federated training of a real LM.
 
-Trains a 12-layer / d_model=768 decoder LM (~103M params, GPT-2-small class)
-for a few hundred FedAvg rounds on synthetic LM data, with game-theoretic
-participation control and full energy metering. This is deliverable (b)'s
-"train ~100M model for a few hundred steps" driver.
+Wraps a registry model (default: a 12-layer / d_model=768 decoder LM,
+~103M params, GPT-2-small class) into the task factory
+(:func:`repro.federated.tasks.model_task`) and trains it with the
+scan-fused campaign engine — game-theoretic participation from
+:class:`~repro.core.controller.ParticipationController`, full energy
+metering, optional Dirichlet non-iid shards and Pallas-backed kernels.
+This is deliverable (b)'s "train ~100M model for a few hundred steps"
+driver, rewired through the same engine the paper sweeps run on.
 
-CPU note: at the default --steps 200 this takes a few hours on the 1-core
-container; --small (~7M params) finishes in minutes with the same code path.
+CPU note: at the default --rounds 200 this takes a few hours on the
+1-core container; --small (~7M params) finishes in minutes with the same
+code path. Any registry architecture works via --arch (reduced variant),
+e.g. ``--arch rwkv6-3b --backend pallas``.
 
-Run:  PYTHONPATH=src python examples/train_fl_lm.py --small --steps 30
+Run:  PYTHONPATH=src python examples/train_fl_lm.py --small --rounds 30
 """
 import argparse
 import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
+from repro.configs import ARCHITECTURES
 from repro.configs.base import ModelConfig
 from repro.core.controller import ParticipationController
 from repro.data.synthetic import SyntheticLM
-from repro.models.registry import get_model, param_count
+from repro.federated.campaign import run_campaigns
+from repro.federated.simulation import FLConfig
+from repro.federated.tasks import model_task
+from repro.models.registry import param_count
 from repro.optim import adamw
-from repro.optim.base import apply_updates, clip_by_global_norm
 from repro.checkpoint.checkpoint import save_checkpoint
 
 LM_100M = ModelConfig(
@@ -39,9 +47,23 @@ LM_SMALL = dataclasses.replace(
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=200,
+                    help="FedAvg rounds (the campaign scan length)")
     ap.add_argument("--small", action="store_true")
+    ap.add_argument("--arch", default="",
+                    help="registry architecture (reduced variant) instead "
+                         "of the built-in LM, e.g. rwkv6-3b, hymba-1.5b, "
+                         "resnet18-cifar")
+    ap.add_argument("--backend", default="none",
+                    choices=["none", "ref", "pallas"],
+                    help="kernel backend for the client fwd/bwd "
+                         "(pallas = interpret mode on CPU)")
+    ap.add_argument("--noniid", action="store_true",
+                    help="Dirichlet label-skewed shards instead of iid "
+                         "streams")
+    ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--n-clients", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--gamma", type=float, default=0.6)
@@ -50,11 +72,10 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
-    cfg = LM_SMALL if args.small else LM_100M
-    api = get_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params, _ = api.init(key)
-    print(f"model {cfg.name}: {param_count(params):,} params")
+    if args.arch:
+        cfg = ARCHITECTURES[args.arch].reduced()
+    else:
+        cfg = LM_SMALL if args.small else LM_100M
 
     ctrl = ParticipationController(n_nodes=50, gamma=args.gamma,
                                    cost=args.cost, mode="ne")
@@ -63,51 +84,46 @@ def main():
           f"(opt {ctrl.diagnostics()['opt_p']:.3f}, "
           f"PoA {ctrl.diagnostics()['poa']:.2f})")
 
-    data = SyntheticLM(vocab=cfg.vocab, order_weight=0.8)
-    opt = adamw(args.lr)
-    opt_state = opt.init(params)
-    ledger = ctrl.new_ledger() if False else None  # ledger is per-50-nodes
-    from repro.core.energy import EnergyLedger
-    ledger = EnergyLedger.create(args.n_clients)
+    task = model_task(
+        cfg, args.seq,
+        backend=None if args.backend == "none" else args.backend,
+        data=(None if cfg.family == "vision"
+              else SyntheticLM(vocab=cfg.vocab, order_weight=0.8)),
+        partition="dirichlet" if args.noniid else "iid",
+        alpha=args.alpha, n_clients=args.n_clients,
+        optimizer=adamw(args.lr))
+    n_params = param_count(task.init_params(jax.random.PRNGKey(0)))
+    print(f"model {cfg.name}: {n_params:,} params, "
+          f"partition={'dirichlet' if args.noniid else 'iid'}, "
+          f"backend={args.backend}")
 
-    @jax.jit
-    def round_fn(params, opt_state, batch, mask):
-        def one(cb):
-            return jax.value_and_grad(lambda q: api.loss(q, cb))(params)
-
-        losses, grads = jax.vmap(one)(batch)
-        m = mask.astype(jnp.float32)
-        denom = jnp.maximum(jnp.sum(m), 1.0)
-        avg = jax.tree.map(
-            lambda g: jnp.sum(
-                g.astype(jnp.float32)
-                * m.reshape((-1,) + (1,) * (g.ndim - 1)), axis=0) / denom,
-            grads)
-        avg, gnorm = clip_by_global_norm(avg, 1.0)
-        updates, opt_state = opt.update(avg, opt_state, params)
-        new_params = apply_updates(params, updates)
-        keep = jnp.sum(m) > 0
-        new_params = jax.tree.map(
-            lambda a, b: jnp.where(keep, a, b), new_params, params)
-        return new_params, opt_state, jnp.sum(losses * m) / denom
-
+    fl = FLConfig(n_clients=args.n_clients, local_steps=args.local_steps,
+                  batch_per_client=args.batch, max_rounds=args.rounds,
+                  seed=0)
+    # B=1 scenario through the scan-fused engine; CampaignResult carries
+    # metrics, the energy ledger, AND the final merged weights.
     t0 = time.time()
-    for step in range(args.steps):
-        kb = jax.random.fold_in(key, 100 + step)
-        batch = jax.vmap(lambda k: data.batch(k, args.batch, args.seq))(
-            jax.random.split(kb, args.n_clients))
-        mask = jax.random.bernoulli(jax.random.fold_in(kb, 1), p,
-                                    (args.n_clients,))
-        params, opt_state, loss = round_fn(params, opt_state, batch, mask)
-        ledger = ledger.record_round(mask, ctrl.energy_params)
-        if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
-            dt = time.time() - t0
-            print(f"round {step:4d}  loss {float(loss):6.3f}  "
-                  f"k={int(mask.sum())}/{args.n_clients}  "
-                  f"energy {float(ledger.total_wh):7.2f} Wh  ({dt:6.1f}s)")
-    print("ledger:", ledger.summary())
+    res = run_campaigns(
+        fl, *task.campaign_args(), task.opt,
+        jax.numpy.full((1, args.n_clients), p, jax.numpy.float32),
+        energy=ctrl.energy_params)
+    jax.block_until_ready(res.energy_wh)
+    wall = time.time() - t0
+
+    rounds = int(res.rounds[0])
+    accs = [float(a) for a in res.acc_history[0][:rounds]]
+    tail = ", ".join(f"{a:.3f}" for a in accs[-5:])
+    print(f"{rounds} rounds in {wall:.1f}s "
+          f"(converged={bool(res.converged[0])})")
+    print(f"val acc trajectory tail: [{tail}]")
+    print(f"energy {float(res.energy_wh[0]):.2f} Wh, "
+          f"mean AoI {float(res.mean_aoi[0]):.2f} rounds, "
+          f"realized participation {float(res.participation_rate[0]):.3f}")
+    print("ledger:", res.scenario_ledger(0).summary())
+
     if args.ckpt_dir:
-        print("saved", save_checkpoint(args.ckpt_dir, args.steps,
+        params = jax.tree.map(lambda x: x[0], res.params)
+        print("saved", save_checkpoint(args.ckpt_dir, rounds,
                                        {"params": params},
                                        metadata={"arch": cfg.name}))
 

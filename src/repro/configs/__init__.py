@@ -13,12 +13,13 @@ from repro.configs.hymba_1_5b import CONFIG as HYMBA_1_5B
 from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
 from repro.configs.deepseek_v2_236b import CONFIG as DEEPSEEK_V2_236B
 from repro.configs.gemma_2b import CONFIG as GEMMA_2B
+from repro.configs.resnet18_cifar import CONFIG as RESNET18_CIFAR
 
 ARCHITECTURES: dict[str, ModelConfig] = {
     c.name: c for c in [
         STABLELM_3B, INTERNVL2_26B, MINICPM3_4B, WHISPER_TINY,
         PHI4_MINI_3_8B, OLMOE_1B_7B, HYMBA_1_5B, RWKV6_3B,
-        DEEPSEEK_V2_236B, GEMMA_2B,
+        DEEPSEEK_V2_236B, GEMMA_2B, RESNET18_CIFAR,
     ]
 }
 
@@ -27,6 +28,12 @@ SKIPS: dict[tuple[str, str], str] = {
     ("whisper-tiny", "long_500k"):
         "encoder-decoder ASR with bounded (30 s) audio context; a 512k-token "
         "autoregressive decode is not meaningful",
+    ("resnet18-cifar", "prefill_32k"):
+        "image classifier: no token sequence, no prefill/decode paths",
+    ("resnet18-cifar", "decode_32k"):
+        "image classifier: no token sequence, no prefill/decode paths",
+    ("resnet18-cifar", "long_500k"):
+        "image classifier: no token sequence, no prefill/decode paths",
 }
 
 

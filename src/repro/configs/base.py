@@ -12,7 +12,7 @@ from typing import Literal, Optional
 __all__ = ["ModelConfig", "ShapeSpec", "INPUT_SHAPES", "MLAConfig", "MoEConfig",
            "SSMConfig"]
 
-Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio", "vision"]
 AttnKind = Literal["gqa", "mla", "none"]
 
 
@@ -105,6 +105,10 @@ class ModelConfig:
             param_dtype="float32",
             compute_dtype="float32",
         )
+        if self.family == "vision":
+            # d_model is the convnet stem width; 8 keeps the reduced
+            # ResNet-18 at ~0.2M params for CPU campaign smoke tests.
+            changes["d_model"] = min(self.d_model, 8)
         if self.n_heads:
             n_heads = min(self.n_heads, 4)
             changes["n_heads"] = n_heads

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["iid_partition", "dirichlet_partition", "pad_shards",
-           "sharded_client_data"]
+           "sharded_client_data", "sharded_client_arrays"]
 
 
 def iid_partition(n_samples: int, n_clients: int, seed: int = 0) -> list[np.ndarray]:
@@ -88,15 +88,28 @@ def sharded_client_data(images, labels, parts: Sequence[np.ndarray], *,
         deterministic in ``(seed, cid, rnd)`` and safe to call under
         ``vmap`` with a traced ``cid``.
     """
+    return sharded_client_arrays({"images": images, "labels": labels},
+                                 parts, seed=seed)
+
+
+def sharded_client_arrays(arrays: dict, parts: Sequence[np.ndarray], *,
+                          seed: int = 1):
+    """Generalization of :func:`sharded_client_data` to any batch pytree.
+
+    ``arrays`` is a dict of dataset arrays sharing the sample axis (e.g.
+    ``{"tokens": (N, S), "labels": (N, S)}`` for LM corpora). Minibatch
+    indices are drawn *once* per (client, round) and applied to every
+    array, so the image/label special case is bitwise-identical to the
+    historical two-argument form.
+    """
     shards = pad_shards(parts)
     maxlen = shards.shape[1]
-    images = jnp.asarray(np.asarray(images)[shards])
-    labels = jnp.asarray(np.asarray(labels)[shards])
+    sharded = {k: jnp.asarray(np.asarray(v)[shards]) for k, v in arrays.items()}
 
     def client_data(cid, rnd, n, steps):
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.PRNGKey(seed), cid), rnd)
         idx = jax.random.randint(key, (steps, n), 0, maxlen)
-        return {"images": images[cid][idx], "labels": labels[cid][idx]}
+        return {k: v[cid][idx] for k, v in sharded.items()}
 
     return client_data

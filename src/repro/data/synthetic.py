@@ -55,6 +55,16 @@ class SyntheticCifar:
             round_idx)
         return self.batch(key, n)
 
+    def dataset(self, n: int) -> dict:
+        """Materialize a fixed n-sample dataset (for index partitioning).
+
+        Unlike the stateless per-(client, round) streams, non-iid splits
+        (:func:`repro.data.partition.dirichlet_partition`) need a concrete
+        sample axis to partition. Deterministic in ``seed`` and disjoint
+        from the stream/val RNG keys.
+        """
+        return self.batch(jax.random.PRNGKey(self.seed + 20_011), n)
+
 
 @dataclasses.dataclass(frozen=True)
 class SyntheticLM:
@@ -89,3 +99,16 @@ class SyntheticLM:
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.PRNGKey(self.seed), client_id), step)
         return self.batch(key, batch, seq)
+
+    def dataset(self, n: int, seq: int) -> dict:
+        """Materialize a fixed n-sequence corpus (for index partitioning).
+
+        Non-iid splits bucket sequences by a class surrogate; LM streams
+        have no labels, so :func:`repro.federated.tasks.model_task` derives
+        one from the leading token. Deterministic in ``seed``, disjoint key
+        from the per-(client, step) streams.
+        """
+        return self.batch(jax.random.PRNGKey(self.seed + 20_011), n, seq)
+
+    def val_set(self, n: int, seq: int) -> dict:
+        return self.batch(jax.random.PRNGKey(self.seed + 10_007), n, seq)

@@ -152,6 +152,9 @@ class CampaignResult:
     present_counts: jax.Array    # (B, N) rounds each node was in the fleet
     present_final: jax.Array     # (B, N) bool presence after the last round
     metrics: MetricStream | None = None  # batched, when obs recorded one
+    #: final merged model params, batched (leaves carry leading B axis) —
+    #: slice scenario i via ``jax.tree.map(lambda x: x[i], result.params)``
+    params: Any = None
 
     @property
     def batch(self) -> int:
@@ -592,4 +595,5 @@ def run_campaigns(
         present_counts=present_counts,
         present_final=present_final,
         metrics=out.get("metrics"),
+        params=out["params"],
     )

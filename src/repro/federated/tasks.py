@@ -13,7 +13,7 @@ matmul throughput, and docs snippets run in seconds on CPU CI.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.data.synthetic import SyntheticCifar
 
-__all__ = ["FLTask", "synthetic_mlp_task"]
+__all__ = ["FLTask", "synthetic_mlp_task", "model_task"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,12 +35,17 @@ class FLTask:
     >>> # run_campaigns(fl, *task.campaign_args(), opt, ps)   # doctest: +SKIP
     """
 
-    data: SyntheticCifar
+    data: Any
     init_params: Callable[[jax.Array], dict]
     loss_fn: Callable
     eval_fn: Callable
     client_data: Callable
     val_batch: dict
+    #: model config behind the task (None for the hand-rolled MLP task)
+    cfg: Any = None
+    #: suggested OptConfig (None -> caller picks); informational only —
+    #: ``campaign_args()`` stays the five engine callables.
+    opt: Any = None
 
     def campaign_args(self) -> tuple:
         """The positional task args of the campaign-engine entry points."""
@@ -102,3 +107,156 @@ def synthetic_mlp_task(
     return FLTask(data=data, init_params=init_params, loss_fn=loss_fn,
                   eval_fn=eval_fn, client_data=client_data,
                   val_batch=data.val_set(val_size))
+
+
+def model_task(
+    cfg,
+    shape=None,
+    *,
+    backend: Optional[str] = None,
+    optimizer=None,
+    data=None,
+    partition: str = "iid",
+    alpha: float = 0.5,
+    n_clients: int = 8,
+    dataset_size: int = 2048,
+    val_size: int = 64,
+    data_seed: int = 0,
+    remat: bool = False,
+) -> FLTask:
+    """Wrap any registered :class:`~repro.models.registry.ModelApi` as an FL task.
+
+    The campaign engine only sees the five :class:`FLTask` callables, so a
+    reduced transformer LM, an RWKV/SSM client, or the paper's ResNet-18
+    runs through the same jitted scan+vmap round loop as the synthetic MLP —
+    including B-scenario vmap, churn, and the mesh-sharded merge.
+
+    Args:
+        cfg: a :class:`~repro.configs.base.ModelConfig` (use ``.reduced()``
+            for CPU-sized campaigns).
+        shape: sequence length for LM families — an int, a
+            :class:`~repro.configs.base.ShapeSpec` (its ``seq_len`` is
+            used), or None for the 16-token smoke default. Ignored for
+            ``family="vision"``.
+        backend: kernel backend threaded through
+            :func:`repro.models.runtime.kernel_scope` for the *training*
+            loss — ``None`` keeps the model's plain jnp path (bitwise
+            whatever the model already did), ``"ref"`` routes fwd/bwd
+            through the :mod:`repro.kernels.ops` jnp oracles, ``"pallas"``
+            runs the Pallas kernels (interpret mode on CPU) with
+            oracle-linearized backward. Eval always uses the plain path.
+        optimizer: optional OptConfig stored on the task (informational).
+        data: override the synthetic data source
+            (:class:`~repro.data.synthetic.SyntheticCifar` for vision,
+            :class:`~repro.data.synthetic.SyntheticLM` otherwise).
+        partition: ``"iid"`` — stateless per-(client, round) streams, the
+            same RNG scheme as :func:`synthetic_mlp_task`; ``"dirichlet"``
+            — materialize a ``dataset_size``-sample dataset and split it
+            label-skewed via :func:`repro.data.partition.dirichlet_partition`
+            (LM streams bucket by leading token). Dirichlet tasks are tied
+            to ``n_clients``: run them with ``fl.n_clients == n_clients``.
+        alpha: Dirichlet concentration (lower = more skew).
+        n_clients: shard count for ``partition="dirichlet"``.
+        dataset_size: materialized sample count for ``partition="dirichlet"``.
+        val_size: validation batch size.
+        data_seed: seed of both the data source and the minibatch streams.
+        remat: forward ``remat=`` to ``ModelApi.loss`` (gradient
+            checkpointing inside the client step).
+
+    Returns:
+        An :class:`FLTask` whose ``client_data(cid, rnd, n, steps)`` emits
+        ``(steps, n, ...)`` batch pytrees, deterministic in
+        ``(data_seed, cid, rnd)`` and vmap-safe with a traced ``cid``.
+    """
+    from repro.data.synthetic import SyntheticLM
+    from repro.models import runtime
+    from repro.models.registry import get_model
+
+    api = get_model(cfg)
+    vision = cfg.family == "vision"
+    if isinstance(shape, int):
+        seq = shape
+    elif shape is not None:
+        seq = shape.seq_len
+    else:
+        seq = 16
+
+    if data is None:
+        data = (SyntheticCifar(n_classes=cfg.vocab, seed=data_seed) if vision
+                else SyntheticLM(vocab=cfg.vocab, seed=data_seed))
+
+    def _extras(key, n: int) -> dict:
+        """Modality frontends beyond the token stream (vlm / audio)."""
+        out = {}
+        if cfg.n_patches:
+            out["patches"] = jax.random.normal(
+                jax.random.fold_in(key, 2),
+                (n, cfg.n_patches, cfg.d_frontend))
+        if cfg.n_frames:
+            out["frames"] = jax.random.normal(
+                jax.random.fold_in(key, 3), (n, cfg.n_frames, cfg.d_model))
+        return out
+
+    def _cast(batch: dict) -> dict:
+        """Pin input dtypes: ``repro.core`` flips on x64, so the default
+        synthetic streams emit float64/int64 in campaign contexts while
+        model params are explicit float32 — cast to each ModelApi's
+        declared input dtypes (int32 tokens/labels, float32 frontends)."""
+        return {k: v.astype(jnp.int32 if jnp.issubdtype(v.dtype, jnp.integer)
+                            else jnp.float32)
+                for k, v in batch.items()}
+
+    def _sample(key, n: int) -> dict:
+        if vision:
+            return _cast(data.batch(key, n))
+        return _cast({**data.batch(key, n, seq), **_extras(key, n)})
+
+    def loss_fn(p, b):
+        if backend is None:
+            return api.loss(p, b, remat=remat)
+        with runtime.kernel_scope(backend):
+            return api.loss(p, b, remat=remat)
+
+    def eval_fn(p, b):
+        logits = api.logits(p, b)
+        return jnp.mean(jnp.argmax(logits, -1) == b["labels"])
+
+    if partition == "iid":
+        def client_data(cid, rnd, n, steps):
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(data_seed), cid), rnd)
+            return jax.vmap(lambda k: _sample(k, n))(
+                jax.random.split(key, steps))
+    elif partition == "dirichlet":
+        from repro.data.partition import (dirichlet_partition,
+                                          sharded_client_arrays)
+        if vision:
+            arrays = _cast(data.dataset(dataset_size))
+            part_labels = np.asarray(arrays["labels"])
+        else:
+            arrays = data.dataset(dataset_size, seq)
+            arrays.update(_extras(jax.random.PRNGKey(data_seed + 20_011),
+                                  dataset_size))
+            arrays = _cast(arrays)
+            # LM sequences carry no class label; bucket by leading token
+            # so low alpha still induces distribution skew across shards.
+            part_labels = np.asarray(arrays["tokens"][:, 0]) % 10
+        parts = dirichlet_partition(part_labels, n_clients, alpha=alpha,
+                                    seed=data_seed)
+        client_data = sharded_client_arrays(arrays, parts, seed=data_seed)
+    else:
+        raise ValueError(f"unknown partition {partition!r}; "
+                         f"expected 'iid' or 'dirichlet'")
+
+    if vision:
+        val_batch = _cast(data.val_set(val_size))
+    else:
+        val_batch = _cast({**data.val_set(val_size, seq),
+                           **_extras(jax.random.PRNGKey(data_seed + 10_007),
+                                     val_size)})
+
+    return FLTask(data=data,
+                  init_params=lambda key: api.init(key)[0],
+                  loss_fn=loss_fn, eval_fn=eval_fn,
+                  client_data=client_data, val_batch=val_batch,
+                  cfg=cfg, opt=optimizer)

@@ -109,7 +109,8 @@ def _scan(cfg, params, x, positions, window, caches, remat, ring=False):
     return x, ncs
 
 
-def forward(cfg: ModelConfig, params, tokens, remat=False):
+def forward(cfg: ModelConfig, params, tokens, remat=False,
+            return_hidden=False):
     cdt = L._dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
     positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
@@ -117,11 +118,23 @@ def forward(cfg: ModelConfig, params, tokens, remat=False):
     window = cfg.sliding_window  # Hymba uses SWA natively in train too
     x, _ = _scan(cfg, params, x, positions, window, None, remat)
     x = L.apply_norm(cfg, params["ln_f"], x)
+    if return_hidden:
+        return x
     logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
     return logits.astype(L._dtype(cfg.logit_dtype))
 
 
 def lm_loss(cfg: ModelConfig, params, batch: dict, remat=False):
+    kb = runtime.kernel_backend()
+    if kb is not None:
+        from repro.kernels import ops as kops
+        x = forward(cfg, params, batch["tokens"], remat=remat,
+                    return_hidden=True)
+        b, s, d = x.shape
+        nll = kops.cross_entropy(x.reshape(b * s, d),
+                                 params["lm_head"].astype(x.dtype),
+                                 batch["labels"].reshape(-1), backend=kb)
+        return jnp.mean(nll)
     logits = forward(cfg, params, batch["tokens"], remat=remat)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]

@@ -174,9 +174,11 @@ def attention_apply(
     k = apply_rope(k, positions, cfg.rope_theta)
 
     if cache is None:
-        if runtime.ATTN_IMPL == "flash":
+        kb = runtime.kernel_backend()
+        if kb is not None or runtime.ATTN_IMPL == "flash":
             from repro.kernels import ops as kops
-            out = kops.attention(q, k, v, causal=True, window=window)
+            out = kops.attention(q, k, v, causal=True, window=window,
+                                 backend=kb)
         else:
             pos_row = positions[0] if positions.ndim > 1 else positions
             mask = _attn_mask(pos_row, pos_row, window)

@@ -34,6 +34,10 @@ class ModelApi:
     init_cache: Callable[..., tuple]                # (batch, length, ring)
     input_specs: Callable[[ShapeSpec], dict]        # ShapeDtypeStructs
     cache_kind: Callable[[ShapeSpec], dict]         # {"length":…, "ring":…}
+    #: (params, batch) -> per-position logits aligned with batch["labels"]
+    #: (LMs: text-tail (B, S, V); vision: (B, n_classes)). The evaluation
+    #: accessor the FL task factory builds accuracy metrics from.
+    logits: Callable[[Params, dict], jax.Array] = None
 
 
 def _token_sds(batch, seq):
@@ -50,6 +54,8 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         return _hybrid_api(cfg)
     if fam == "audio":
         return _encdec_api(cfg)
+    if fam == "vision":
+        return _resnet_api(cfg)
     raise ValueError(f"unknown family {fam}")
 
 
@@ -88,6 +94,13 @@ def _transformer_api(cfg: ModelConfig) -> ModelApi:
         return transformer.serve_step(cfg, params, cache, token, pos,
                                       ring=ring)
 
+    def logits(params, batch):
+        out, _ = transformer.forward(cfg, params, batch["tokens"],
+                                     patches=batch.get("patches"))
+        if cfg.family == "vlm":
+            out = out[:, -batch["labels"].shape[1]:]
+        return out
+
     return ModelApi(
         cfg=cfg,
         init=lambda key: transformer.init_lm(cfg, key),
@@ -97,6 +110,7 @@ def _transformer_api(cfg: ModelConfig) -> ModelApi:
             transformer.init_cache(cfg, batch, length, ring, prefill_len),
         input_specs=input_specs,
         cache_kind=cache_kind,
+        logits=logits,
     )
 
 
@@ -134,6 +148,8 @@ def _rwkv_api(cfg: ModelConfig) -> ModelApi:
             rwkv.init_state(cfg, batch),
         input_specs=input_specs,
         cache_kind=cache_kind,
+        logits=lambda params, batch:
+            rwkv.forward(cfg, params, batch["tokens"])[0],
     )
 
 
@@ -165,6 +181,8 @@ def _hybrid_api(cfg: ModelConfig) -> ModelApi:
             hybrid.init_cache(cfg, batch, length, ring, prefill_len),
         input_specs=input_specs,
         cache_kind=cache_kind,
+        logits=lambda params, batch:
+            hybrid.forward(cfg, params, batch["tokens"]),
     )
 
 
@@ -188,6 +206,10 @@ def _encdec_api(cfg: ModelConfig) -> ModelApi:
     def serve_step(params, cache, token, pos, ring=False):
         return encdec.serve_step(cfg, params, cache, token, pos)
 
+    def logits(params, batch):
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        return encdec.decode_train(cfg, params, batch["tokens"], enc_out)
+
     return ModelApi(
         cfg=cfg,
         init=lambda key: encdec.init_model(cfg, key),
@@ -198,6 +220,47 @@ def _encdec_api(cfg: ModelConfig) -> ModelApi:
             encdec.init_cache(cfg, batch, length, prefill_len),
         input_specs=input_specs,
         cache_kind=cache_kind,
+        logits=logits,
+    )
+
+
+# -- resnet (the paper's CIFAR workload) ---------------------------------------
+
+
+def _resnet_api(cfg: ModelConfig) -> ModelApi:
+    """Vision family: ``d_model`` = stem width, ``vocab`` = class count.
+
+    Batches are ``{"images": (B, H, W, 3) float32, "labels": (B,) int32}``
+    — the same pytree :class:`repro.data.synthetic.SyntheticCifar` emits,
+    so the FL task factory plugs it straight into the campaign engine.
+    There is no token sequence: no decode path, no KV cache.
+    """
+    from repro.models import resnet
+
+    def input_specs(shape: ShapeSpec) -> dict:
+        b = shape.global_batch
+        return {"images": jax.ShapeDtypeStruct((b, 32, 32, 3), jnp.float32),
+                "labels": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+    def init(key):
+        params = resnet.init_resnet18(key, n_classes=cfg.vocab,
+                                      width=cfg.d_model)
+        # axis specs mirror the param tree (convnet: no sharded axes)
+        specs = jax.tree.map(lambda _: (), params)
+        return params, specs
+
+    def serve_step(params, cache, token, pos, ring=False):
+        raise NotImplementedError("vision family has no decode path")
+
+    return ModelApi(
+        cfg=cfg,
+        init=init,
+        loss=lambda params, batch, remat=False: resnet.loss_fn(params, batch),
+        serve_step=serve_step,
+        init_cache=lambda batch, length, ring, prefill_len=0: ({}, {}),
+        input_specs=input_specs,
+        cache_kind=lambda shape: {"length": 0, "ring": False},
+        logits=lambda params, batch: resnet.forward(params, batch["images"]),
     )
 
 

@@ -19,3 +19,42 @@ def layer_scan_unroll():
 # "flash"     — the Pallas flash-attention kernel (interpret on CPU,
 #               compiled on TPU). Decode paths always use the cache code.
 ATTN_IMPL = "reference"
+
+
+# Kernel backend for the model forward/backward hot paths (attention, WKV,
+# selective scan, fused cross-entropy). ``None`` (default) keeps every model
+# on its plain jnp code — bitwise-identical to the pre-dispatch program.
+# "ref" routes the hot paths through the :mod:`repro.kernels.ops` wrappers
+# pinned to the jnp oracles (the parity baseline); "pallas" reaches the
+# Pallas kernels (interpret on CPU, compiled on TPU) with oracle-vjp
+# backward passes, so the same loss is differentiable end-to-end.
+#
+# Like SCAN_UNROLL/ATTN_IMPL this is a *trace-time* knob: enter
+# :func:`kernel_scope` inside the function being traced (the FL task
+# factory wraps its loss/eval bodies — see ``repro.federated.tasks``), and
+# a jitted program bakes in whatever was active when it was traced.
+KERNEL_BACKEND: str | None = None
+
+
+def kernel_backend() -> str | None:
+    """The active model-kernel backend (``None`` = plain jnp model code)."""
+    return KERNEL_BACKEND
+
+
+import contextlib as _contextlib
+
+
+@_contextlib.contextmanager
+def kernel_scope(backend: str | None):
+    """Pin the model-kernel backend inside the ``with`` block (trace time).
+
+    ``kernel_scope(None)`` is a no-op context (the plain-model default),
+    so callers can thread an optional backend without branching.
+    """
+    global KERNEL_BACKEND
+    prev = KERNEL_BACKEND
+    KERNEL_BACKEND = backend
+    try:
+        yield
+    finally:
+        KERNEL_BACKEND = prev

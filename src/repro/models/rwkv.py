@@ -113,9 +113,15 @@ def wkv_scan(r, k, v, w, u, state):
     return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
 
 
-def time_mix_apply(cfg, p, x, x_prev_last, wkv_state):
+def time_mix_apply(cfg, p, x, x_prev_last, wkv_state, fresh_state=False):
     """x: (B,S,D). x_prev_last: (B,D) state entering this chunk.
-    Returns (y, new_x_prev_last, new_wkv_state)."""
+    Returns (y, new_x_prev_last, new_wkv_state).
+
+    ``fresh_state`` (static) asserts the incoming ``wkv_state`` is zeros
+    (the training path). Only then may the WKV recurrence dispatch to the
+    Pallas kernel under an active :func:`repro.models.runtime.kernel_scope`
+    — the kernel always starts its recurrence from a zero state; streaming
+    chunks (decode, non-zero state) always take the lax.scan path."""
     cdt = x.dtype
     b, s_len, d = x.shape
     h, hd = _heads(cfg), cfg.ssm.head_dim
@@ -138,7 +144,13 @@ def time_mix_apply(cfg, p, x, x_prev_last, wkv_state):
     kh = k.reshape(b, s_len, h, hd)
     vh = v.reshape(b, s_len, h, hd)
     wh = w.reshape(b, s_len, h, hd)
-    out, new_state = wkv_scan(rh, kh, vh, wh, p["bonus"], wkv_state)
+    kb = runtime.kernel_backend()
+    if kb is not None and fresh_state:
+        from repro.kernels import ops as kops
+        out, new_state = kops.rwkv6(rh, kh, vh, wh, p["bonus"], backend=kb)
+        out = out.astype(cdt)
+    else:
+        out, new_state = wkv_scan(rh, kh, vh, wh, p["bonus"], wkv_state)
     out = out.reshape(b, s_len, d)
 
     # per-head group norm
@@ -175,11 +187,12 @@ def init_block(cfg: ModelConfig, key):
     return p, s
 
 
-def block_apply(cfg, params, x, state):
+def block_apply(cfg, params, x, state, fresh_state=False):
     """state: {"x_time": (B,D), "x_chan": (B,D), "wkv": (B,H,D,D)}"""
     h = L.apply_norm(cfg, params["ln_time"], x)
     y, x_time, wkv = time_mix_apply(cfg, params["time"], h,
-                                    state["x_time"], state["wkv"])
+                                    state["x_time"], state["wkv"],
+                                    fresh_state=fresh_state)
     x = x + y
     h = L.apply_norm(cfg, params["ln_chan"], x)
     y, x_chan = channel_mix_apply(cfg, params["chan"], h, state["x_chan"])
@@ -231,9 +244,14 @@ def init_state(cfg: ModelConfig, batch: int):
     return state, specs
 
 
-def forward(cfg: ModelConfig, params, tokens, state=None, remat=False):
-    """Returns (logits, new_state). state=None -> fresh zeros."""
+def forward(cfg: ModelConfig, params, tokens, state=None, remat=False,
+            return_hidden=False):
+    """Returns (logits, new_state). state=None -> fresh zeros.
+
+    ``return_hidden`` skips the lm_head matmul and returns the final-norm
+    hidden states instead of logits (the fused cross-entropy path)."""
     b = tokens.shape[0]
+    fresh = state is None
     if state is None:
         state, _ = init_state(cfg, b)
     cdt = L._dtype(cfg.compute_dtype)
@@ -243,18 +261,30 @@ def forward(cfg: ModelConfig, params, tokens, state=None, remat=False):
     def body(carry, xs):
         xv = carry
         lp, lstate = xs
-        out, nstate = block_apply(cfg, lp, xv, lstate)
+        out, nstate = block_apply(cfg, lp, xv, lstate, fresh_state=fresh)
         return out, nstate
 
     fn = jax.checkpoint(body) if remat else body
     x, new_state = jax.lax.scan(fn, x, (params["layers"], state),
                                 unroll=runtime.layer_scan_unroll())
     x = L.apply_norm(cfg, params["ln_f"], x)
+    if return_hidden:
+        return x, new_state
     logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
     return logits.astype(L._dtype(cfg.logit_dtype)), new_state
 
 
 def lm_loss(cfg: ModelConfig, params, batch: dict, remat=False):
+    kb = runtime.kernel_backend()
+    if kb is not None:
+        from repro.kernels import ops as kops
+        x, _ = forward(cfg, params, batch["tokens"], remat=remat,
+                       return_hidden=True)
+        b, s, d = x.shape
+        nll = kops.cross_entropy(x.reshape(b * s, d),
+                                 params["lm_head"].astype(x.dtype),
+                                 batch["labels"].reshape(-1), backend=kb)
+        return jnp.mean(nll)
     logits, _ = forward(cfg, params, batch["tokens"], remat=remat)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]

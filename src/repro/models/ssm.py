@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.models import runtime
 
 Params = dict
 
@@ -107,9 +108,20 @@ def ssm_apply(cfg: ModelConfig, p: Params, x, state=None):
     delta = jax.nn.softplus(
         jnp.einsum("bsr,re->bse", dt, p["dt_proj"].astype(cdt)).astype(jnp.float32)
         + p["dt_bias"].astype(jnp.float32))
-    h0 = (state["h"] if state is not None
-          else jnp.zeros((x.shape[0], d_in, n), jnp.float32))
-    y, h = selective_scan(xc, delta, p["a_log"], b_sel, c_sel, p["d_skip"], h0)
+    kb = runtime.kernel_backend()
+    if kb is not None and state is None:
+        # Training path (zero initial state): dispatch the recurrence to the
+        # kernel layer — the Pallas scan always starts from h = 0, so the
+        # streaming/decode path (state is not None) stays on lax.scan.
+        from repro.kernels import ops as kops
+        y, h = kops.ssm(xc, delta, p["a_log"], b_sel, c_sel, p["d_skip"],
+                        backend=kb)
+        y = y.astype(cdt)
+    else:
+        h0 = (state["h"] if state is not None
+              else jnp.zeros((x.shape[0], d_in, n), jnp.float32))
+        y, h = selective_scan(xc, delta, p["a_log"], b_sel, c_sel,
+                              p["d_skip"], h0)
     y = y * jax.nn.silu(z)
     out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cdt))
     new_state = {"h": h}

@@ -163,8 +163,12 @@ def _scan_blocks(cfg, stacked, x, positions, window, caches, remat,
 
 
 def forward(cfg: ModelConfig, params: Params, tokens, positions=None,
-            patches=None, window=0, remat=False):
-    """Full-sequence forward. Returns (logits, aux_loss)."""
+            patches=None, window=0, remat=False, return_hidden=False):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    ``return_hidden`` returns the final-norm hidden states ``(B, S, D)``
+    instead of logits — the fused cross-entropy path avoids materializing
+    the ``(B, S, V)`` logits in HBM (see :func:`lm_loss`)."""
     if positions is None:
         positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
         positions = jnp.broadcast_to(positions, tokens.shape)
@@ -179,6 +183,8 @@ def forward(cfg: ModelConfig, params: Params, tokens, positions=None,
     x, _, aux = _scan_blocks(cfg, params["layers"], x, positions, window,
                              None, remat)
     x = L.apply_norm(cfg, params["ln_f"], x)
+    if return_hidden:
+        return x, aux
     ldt = L._dtype(cfg.logit_dtype)
     if cfg.tie_embeddings:
         logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
@@ -188,10 +194,30 @@ def forward(cfg: ModelConfig, params: Params, tokens, positions=None,
 
 
 def lm_loss(cfg: ModelConfig, params: Params, batch: dict, remat=False):
-    """Next-token cross entropy (+ MoE aux). batch: tokens, labels[, patches]."""
+    """Next-token cross entropy (+ MoE aux). batch: tokens, labels[, patches].
+
+    Under an active :func:`repro.models.runtime.kernel_scope` the NLL is
+    computed by the fused cross-entropy dispatch
+    (:func:`repro.kernels.ops.cross_entropy`) on the final hidden states —
+    the ``(B, S, V)`` logits are never materialized."""
+    labels = batch["labels"]
+    kb = runtime.kernel_backend()
+    if kb is not None:
+        from repro.kernels import ops as kops
+        x, aux = forward(cfg, params, batch["tokens"],
+                         patches=batch.get("patches"), remat=remat,
+                         return_hidden=True)
+        if cfg.family == "vlm":
+            # visual positions carry no LM loss; text-tail hidden only
+            x = x[:, -labels.shape[1]:]
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"]).astype(x.dtype)
+        b, s, d = x.shape
+        nll = kops.cross_entropy(x.reshape(b * s, d), w,
+                                 labels.reshape(-1), backend=kb)
+        return jnp.mean(nll) + aux
     logits, aux = forward(cfg, params, batch["tokens"],
                           patches=batch.get("patches"), remat=remat)
-    labels = batch["labels"]
     if cfg.family == "vlm":
         # visual positions carry no LM loss; logits for text tail only
         logits = logits[:, -labels.shape[1]:]

@@ -1,0 +1,130 @@
+"""Hypothesis properties of the data-partition layer and the task factory.
+
+Partition invariants (ISSUE 8 satellite 3):
+
+* every dataset sample lands in **exactly one** Dirichlet shard;
+* shards are deterministic in the seed;
+* alpha → ∞ recovers near-iid per-client label histograms.
+
+Task invariants: model-task losses stay finite float32 scalars across
+(batch, seq) draws, and the per-(client, round) streams are deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die, without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.core  # noqa: F401  (x64 on: the campaign-context numerics)
+from repro.configs import ARCHITECTURES
+from repro.data.partition import dirichlet_partition, pad_shards
+from repro.federated.tasks import model_task
+
+label_sets = st.integers(0, 2 ** 31 - 1).flatmap(
+    lambda seed: st.builds(
+        lambda n, c: np.random.default_rng(seed).integers(0, c, n),
+        st.integers(40, 400), st.integers(2, 10)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(label_sets, st.integers(1, 8),
+       st.floats(0.05, 100.0, allow_nan=False),
+       st.integers(0, 2 ** 31 - 1))
+def test_dirichlet_assigns_every_sample_exactly_once(labels, n_clients,
+                                                     alpha, seed):
+    parts = dirichlet_partition(labels, n_clients, alpha=alpha, seed=seed)
+    assert len(parts) == n_clients
+    flat = np.concatenate([p for p in parts]) if parts else np.array([])
+    assert len(flat) == len(labels)                      # no drops
+    assert len(np.unique(flat)) == len(labels)           # no duplicates
+    np.testing.assert_array_equal(np.sort(flat), np.arange(len(labels)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(label_sets, st.integers(1, 8),
+       st.floats(0.05, 100.0, allow_nan=False),
+       st.integers(0, 2 ** 31 - 1))
+def test_dirichlet_is_deterministic_in_seed(labels, n_clients, alpha, seed):
+    a = dirichlet_partition(labels, n_clients, alpha=alpha, seed=seed)
+    b = dirichlet_partition(labels, n_clients, alpha=alpha, seed=seed)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_dirichlet_alpha_inf_is_near_iid(seed):
+    """alpha → ∞ ⇒ every client's label histogram ≈ the global one."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 4000)
+    n_clients = 4
+    parts = dirichlet_partition(labels, n_clients, alpha=1e6, seed=seed)
+    global_hist = np.bincount(labels, minlength=10) / len(labels)
+    for p in parts:
+        hist = np.bincount(labels[p], minlength=10) / max(len(p), 1)
+        # ~1000 samples/client: binomial noise keeps |Δ| well under 0.06
+        assert np.max(np.abs(hist - global_hist)) < 0.06
+
+
+@settings(max_examples=25, deadline=None)
+@given(label_sets, st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_pad_shards_wraps_to_own_shard(labels, n_clients, seed):
+    """Padding repeats a client's own indices — never leaks other shards."""
+    parts = dirichlet_partition(labels, n_clients, alpha=5.0, seed=seed)
+    if any(len(p) == 0 for p in parts):
+        with pytest.raises(ValueError):
+            pad_shards(parts)
+        return
+    shards = pad_shards(parts)
+    assert shards.shape == (n_clients, max(len(p) for p in parts))
+    for i, p in enumerate(parts):
+        assert set(shards[i].tolist()) == set(np.asarray(p).tolist())
+
+
+# -- task-factory stream properties ------------------------------------------
+
+_LM_CFG = dataclasses.replace(
+    ARCHITECTURES["stablelm-3b"].reduced(), n_layers=1, d_model=32,
+    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+_TASK_CACHE: dict = {}
+
+
+def _lm_task(seq: int):
+    if seq not in _TASK_CACHE:
+        _TASK_CACHE[seq] = model_task(_LM_CFG, seq, val_size=4)
+    return _TASK_CACHE[seq]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([4, 8, 16]),
+       st.integers(0, 50), st.integers(0, 50))
+def test_model_task_loss_finite_float32(batch, seq, cid, rnd):
+    """Loss is a finite float32 scalar for any (batch, seq, client, round)."""
+    task = _lm_task(seq)
+    if "params" not in _TASK_CACHE:
+        _TASK_CACHE["params"] = task.init_params(jax.random.PRNGKey(0))
+    params = _TASK_CACHE["params"]
+    batches = task.client_data(cid, rnd, batch, 1)
+    assert batches["tokens"].shape == (1, batch, seq)
+    assert batches["tokens"].dtype == jnp.int32
+    loss = task.loss_fn(params, jax.tree.map(lambda x: x[0], batches))
+    assert loss.shape == ()
+    assert loss.dtype == jnp.float32          # stable under x64 mode
+    assert bool(jnp.isfinite(loss))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50), st.integers(0, 50))
+def test_model_task_stream_deterministic(cid, rnd):
+    """client_data is pure in (seed, cid, rnd) — scan/vmap replay safety."""
+    task = _lm_task(8)
+    a = task.client_data(cid, rnd, 2, 2)
+    b = task.client_data(cid, rnd, 2, 2)
+    for ka, kb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
