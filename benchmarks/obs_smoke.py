@@ -19,6 +19,7 @@ Run:  PYTHONPATH=src:. python benchmarks/obs_smoke.py
 from __future__ import annotations
 
 import argparse
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,8 @@ def main(argv: list[str] | None = None) -> None:
         base = run_campaigns(fl, *task.campaign_args(), opt, ps)
         jax.block_until_ready(base.acc_history)
 
+    # the sink appends (crash/interleave safety); start a fresh stream here
+    pathlib.Path(args.events).unlink(missing_ok=True)
     with EventSink(args.events) as sink:
         obs = ObsConfig(enabled=True, events=True, sink=sink)
         with tracer.span("instrumented_compile+run"):

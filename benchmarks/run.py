@@ -62,6 +62,12 @@ def _obs_smoke() -> None:
     obs_smoke.main([])
 
 
+@_suite("serve", ("BENCH_serve.json", "OBS_serve_events.jsonl"))
+def _serve() -> None:
+    from benchmarks import serve_load
+    serve_load.main([])
+
+
 @_suite("ne_sweep", ())
 def _ne_sweep() -> None:
     from benchmarks import heterogeneous_sweep

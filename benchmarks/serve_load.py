@@ -1,0 +1,89 @@
+"""Closed-loop load generator for the scenario-sweep service.
+
+Drives :class:`repro.serve.SweepService` with a seeded mixed workload
+(NE solves + γ* calibrations + FedAvg campaigns + a few malformed
+payloads) in closed-loop waves — each wave submits a slice of the
+workload, polls to completion, then submits the next, so queue depth and
+per-request latency reflect a live service rather than one giant batch —
+and writes a ``repro.obs/v1`` ``BENCH_serve.json`` artifact with the
+serving headline numbers: p50/p95/mean latency, throughput, cache-hit
+rate, padding overhead, and the per-bucket compile table. CI validates it
+with ``tools/obs_report.py --check`` and uploads it next to the other
+benchmark artifacts.
+
+Run:  PYTHONPATH=src:. python benchmarks/serve_load.py
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import time
+
+from repro.obs import EventSink
+from repro.obs.export import write_artifact
+from repro.serve import SweepService
+from repro.serve.workload import synthetic_workload
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--events", default="OBS_serve_events.jsonl")
+    ap.add_argument("--requests", type=int, default=520)
+    ap.add_argument("--wave", type=int, default=64,
+                    help="closed-loop wave size (submit, drain, repeat)")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    payloads = synthetic_workload(args.requests, seed=args.seed)
+    # the sink appends (two-sink interleave safety); start a fresh stream
+    pathlib.Path(args.events).unlink(missing_ok=True)
+
+    ok = rejected = 0
+    by_kind: dict[str, int] = {}
+    t0 = time.perf_counter()
+    with EventSink(args.events) as sink:
+        with SweepService(max_batch=args.max_batch, sink=sink) as svc:
+            for start in range(0, len(payloads), args.wave):
+                for resp in svc.serve(payloads[start:start + args.wave]):
+                    ok += resp.ok
+                    rejected += not resp.ok
+                    by_kind[resp.kind] = by_kind.get(resp.kind, 0) + 1
+            stats = svc.stats()
+        sink.flush()
+        n_events = len(sink)
+    elapsed = time.perf_counter() - t0
+
+    data = {
+        "requests": len(payloads),
+        "ok": ok,
+        "rejected": rejected,
+        "by_kind": by_kind,
+        "wave": args.wave,
+        "max_batch": args.max_batch,
+        "elapsed_s": round(elapsed, 3),
+        "throughput_rps": round(len(payloads) / max(elapsed, 1e-9), 2),
+        "latency_us": stats["latency"],
+        "cache_hit_rate": stats["cache"]["hit_rate"],
+        "cache": stats["cache"],
+        "padding_overhead": stats["padding_overhead"],
+        "dispatches": stats["dispatches"],
+        "rows": stats["rows"],
+        "buckets": stats["compile"],
+        "kernel_dispatch": stats["kernel_dispatch"],
+        "events": n_events,
+    }
+    write_artifact(args.json, "serve_load", data, seed=args.seed,
+                   backend="ref")
+    lat = stats["latency"]
+    print(f"serve load: {len(payloads)} requests ({ok} ok, {rejected} "
+          f"rejected) in {elapsed:.1f}s -> "
+          f"{data['throughput_rps']:.1f} req/s; p50 "
+          f"{lat['p50_us'] / 1e3:.1f} ms / p95 {lat['p95_us'] / 1e3:.1f} ms; "
+          f"cache hit rate {data['cache_hit_rate']:.0%}; padding overhead "
+          f"{data['padding_overhead']:.1%}; artifact -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

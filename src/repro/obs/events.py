@@ -71,7 +71,11 @@ class EventSink:
         if self.path is not None and enabled:
             if self.path.parent != pathlib.Path("."):
                 self.path.parent.mkdir(parents=True, exist_ok=True)
-            self._file = self.path.open("w")
+            # Append mode: two sinks sharing a path interleave whole records
+            # instead of truncating each other's stream mid-file. Emitters
+            # that want a fresh stream (the benchmark drivers) unlink the
+            # file before constructing the sink.
+            self._file = self.path.open("a")
 
     # -- host-side ----------------------------------------------------------
 
@@ -90,7 +94,10 @@ class EventSink:
             self._seq += 1
             self._events.append(record)
             if self._file is not None:
+                # One write + flush per record: a line is either absent or
+                # whole, and concurrent sinks on one path can't shear it.
                 self._file.write(json.dumps(record) + "\n")
+                self._file.flush()
 
     # -- inside-jit ---------------------------------------------------------
 

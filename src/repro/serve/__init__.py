@@ -1,0 +1,41 @@
+"""Scenario-sweep-as-a-service: the in-process NE/calibration/campaign
+server.
+
+The paper's control plane, made persistent: data-collector deployments
+don't solve one game — they stream scenario batches (fleet sizes, cost
+draws, incentive targets) against long-lived solvers. :mod:`repro.serve`
+wraps the repo's jitted batched engines in a request/response service:
+
+* :mod:`repro.serve.schema` — the versioned (``repro.serve/v1``) request/
+  response wire format with total validation (typed
+  :class:`~repro.serve.schema.RequestError`, never a trace-time crash);
+* :mod:`repro.serve.bucketing` — the padding/bucketing policy mapping
+  ragged traffic onto a closed set of compiled shapes;
+* :mod:`repro.serve.service` — :class:`~repro.serve.service.SweepService`,
+  the queue + dispatch + AOT-compiled-program cache + latency/obs layer.
+
+Quickstart::
+
+    from repro.serve import SweepService
+    svc = SweepService()
+    svc.submit({"schema": "repro.serve/v1", "kind": "ne_solve",
+                "costs": [0.05, 0.1, 0.2], "gammas": 1.5})
+    [resp] = svc.poll()
+    assert resp.ok and resp.result["converged"]
+"""
+from repro.serve.bucketing import (DEFAULT_MAX_BATCH, Bucket, batch_rung,
+                                   bucket_for, chunk_rows, group_key,
+                                   padding_overhead)
+from repro.serve.schema import (KINDS, SCHEMA, CalibrateRequest,
+                                CampaignRequest, DurationSpec, NESolveRequest,
+                                Request, RequestError, Response,
+                                parse_request)
+from repro.serve.service import SweepService
+
+__all__ = [
+    "SCHEMA", "KINDS", "DurationSpec", "NESolveRequest", "CalibrateRequest",
+    "CampaignRequest", "Request", "RequestError", "Response",
+    "parse_request", "Bucket", "DEFAULT_MAX_BATCH", "batch_rung",
+    "bucket_for", "chunk_rows", "group_key", "padding_overhead",
+    "SweepService",
+]

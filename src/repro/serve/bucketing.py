@@ -1,0 +1,154 @@
+"""Padding/bucketing policy for the scenario-sweep service.
+
+The jitted batched engines are fixed-shape programs: every distinct
+``(batch, N, statics)`` combination is its own XLA compile. Serving ad-hoc
+request traffic therefore needs a *bucketing policy* that maps ragged
+request batches onto a small, closed set of compiled shapes:
+
+* **The node axis is never padded.** Padding N would change the game (an
+  extra node shifts every Poisson-binomial pmf), so a request's exact N is
+  part of its bucket identity. Requests only share a compiled program when
+  their games have the same N.
+* **The batch axis is padded to a geometric ladder.** Scenario rows are
+  embarrassingly parallel under ``vmap``, so padding lanes (edge-replicas
+  via :func:`repro.launch.sharding.pad_batch`) change nothing about the
+  real lanes — results are sliced back to the real rows, and the padded
+  program is reused for every batch size that rounds up to the same rung.
+  The ladder is geometric (1, 2, 4, …, ``max_batch``): at most
+  ``log2(max_batch)+1`` compiles per (family, N, statics) bucket, and
+  padding overhead is bounded by 50% of a dispatch in the worst case.
+* **Oversize groups chunk.** More rows than ``max_batch`` dispatch as
+  multiple full-ladder chunks (the compiled-program cache makes the repeat
+  dispatches free).
+
+Bucket selection is a pure function of the validated request and the row
+count — deterministic, pinned by ``tests/test_serve_bucketing.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.serve.schema import (CalibrateRequest, CampaignRequest,
+                                NESolveRequest, Request)
+
+__all__ = ["DEFAULT_MAX_BATCH", "Bucket", "batch_rung", "bucket_for",
+           "chunk_rows", "padding_overhead"]
+
+DEFAULT_MAX_BATCH = 64
+
+
+def batch_rung(rows: int, *, max_batch: int = DEFAULT_MAX_BATCH) -> int:
+    """Smallest ladder rung >= ``rows`` (capped at ``max_batch``).
+
+    >>> [batch_rung(r) for r in (1, 2, 3, 5, 17, 64, 200)]
+    [1, 2, 4, 8, 32, 64, 64]
+    """
+    if rows < 1:
+        raise ValueError(f"rows must be >= 1, got {rows}")
+    rung = 1
+    while rung < rows and rung < max_batch:
+        rung *= 2
+    return min(rung, max_batch)
+
+
+def chunk_rows(rows: int, *, max_batch: int = DEFAULT_MAX_BATCH) -> list[int]:
+    """Split ``rows`` into dispatch chunk sizes (full rungs, then the tail).
+
+    >>> chunk_rows(150, max_batch=64)
+    [64, 64, 22]
+    """
+    out = []
+    while rows > 0:
+        take = min(rows, max_batch)
+        out.append(take)
+        rows -= take
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """Identity of one compiled program in the service cache.
+
+    ``family`` names the engine stage (``ne/solve``, ``ne/verify``,
+    ``sym/solve``, ``campaign/run``), ``n`` the unpadded node count,
+    ``batch`` the padded ladder rung, ``statics`` the engine's static
+    arguments (a hashable tuple — part of the traced program), and
+    ``backend``/``mesh_axes`` the dispatch context.
+    """
+
+    family: str
+    n: int
+    batch: int
+    statics: tuple
+    backend: str | None = None
+    mesh_axes: tuple | None = None
+
+    @property
+    def label(self) -> str:
+        parts = [self.family, f"n{self.n}", f"b{self.batch}"]
+        if self.backend:
+            parts.append(self.backend)
+        if self.mesh_axes:
+            parts.append("mesh=" + "x".join(map(str, self.mesh_axes)))
+        return "/".join(parts)
+
+
+def _statics_for(req: Request) -> tuple:
+    """The static (trace-baked) arguments a request's engine needs."""
+    if isinstance(req, NESolveRequest):
+        return (float(req.damping), int(req.max_iters), float(req.tol),
+                int(req.verify_grid))
+    if isinstance(req, CalibrateRequest):
+        return (int(req.ne_grid), int(req.opt_grid))
+    if isinstance(req, CampaignRequest):
+        return (int(req.rounds), int(req.local_steps),
+                int(req.batch_per_client), float(req.target_acc),
+                int(req.consecutive))
+    raise TypeError(f"not a request: {type(req).__name__}")
+
+
+_FAMILY = {NESolveRequest: "ne", CalibrateRequest: "sym",
+           CampaignRequest: "campaign"}
+
+
+def bucket_for(req: Request, rows: int, *,
+               max_batch: int = DEFAULT_MAX_BATCH,
+               backend: str | None = None,
+               mesh_axes: tuple | None = None) -> Bucket:
+    """The compiled-program bucket serving ``rows`` rows of this request's
+    family. Deterministic: same request fields + row count → same bucket."""
+    batch = batch_rung(rows, max_batch=max_batch)
+    if mesh_axes:
+        # shard-divisibility: the mesh's data axes must divide the rung
+        import math
+        shards = math.prod(mesh_axes)
+        batch = ((batch + shards - 1) // shards) * shards
+    return Bucket(family=_FAMILY[type(req)], n=req.n, batch=batch,
+                  statics=_statics_for(req), backend=backend,
+                  mesh_axes=mesh_axes)
+
+
+def padding_overhead(real_rows: int, padded_rows: int) -> float:
+    """Wasted-lane fraction of a dispatch (0 when the rung fits exactly)."""
+    if padded_rows <= 0:
+        return 0.0
+    return (padded_rows - real_rows) / padded_rows
+
+
+def group_key(req: Request) -> tuple[Any, ...]:
+    """Requests with equal group keys may share one dispatch.
+
+    Finer than the bucket: rows in one *dispatch* must also agree on the
+    values an engine takes once per call rather than once per row — the
+    shared duration table of the symmetric solver — while the *program*
+    cache only keys on shapes + statics.
+    """
+    if isinstance(req, NESolveRequest):
+        return ("ne", req.n, _statics_for(req))
+    if isinstance(req, CalibrateRequest):
+        return ("sym", req.n, _statics_for(req), req.dur)
+    if isinstance(req, CampaignRequest):
+        # energy rates are per-row traced inputs, not dispatch-shared
+        return ("campaign", req.n, _statics_for(req))
+    raise TypeError(f"not a request: {type(req).__name__}")

@@ -1,0 +1,495 @@
+"""Versioned request/response schema for the scenario-sweep service.
+
+Every payload crossing the :class:`repro.serve.SweepService` boundary is a
+plain JSON-able dict wrapped in the ``repro.serve/v1`` envelope, mirroring
+the ``repro.obs/v1`` artifact convention: a ``schema`` string, a ``kind``
+discriminator, and kind-specific fields. Three request families map onto
+the repo's three jitted batched engines:
+
+=============  =====================================================
+``kind``       engine
+=============  =====================================================
+``ne_solve``   :func:`repro.core.asymmetric_batched.solve_heterogeneous`
+               (+ jitted certification) — one heterogeneous NE per
+               request.
+``calibrate``  :func:`repro.mechanisms.batched.solve_batched` — the
+               request expands into a γ-grid of symmetric scenarios
+               and the smallest γ meeting ``target_poa`` is returned
+               (grid-resolution γ*, the serving twin of
+               :func:`repro.mechanisms.aoi_reward.calibrate_gamma`).
+``campaign``   :func:`repro.federated.campaign.run_campaigns` — one
+               FedAvg campaign scenario per request on the service's
+               task.
+=============  =====================================================
+
+Validation is strict and **total**: :func:`parse_request` either returns a
+frozen request dataclass or raises a :class:`RequestError` carrying a
+stable machine-readable ``code`` (and usually the offending ``field``).
+Nothing escapes validation unchecked — every value that later determines a
+traced shape or a static argument is type- and range-checked here, so a
+malformed payload can never surface as a trace-time crash inside an engine
+(the contract fuzzed by ``tests/test_serve.py``).
+
+Round-trip contract: ``parse_request(req.to_dict()) == req`` for every
+valid request, and ``to_dict()`` is canonical — defaults are materialized,
+so two requests that solve the same scenario serialize identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping
+
+__all__ = [
+    "SCHEMA",
+    "KINDS",
+    "N_MAX",
+    "CAMPAIGN_N_MAX",
+    "GRID_MAX",
+    "RequestError",
+    "DurationSpec",
+    "NESolveRequest",
+    "CalibrateRequest",
+    "CampaignRequest",
+    "Request",
+    "Response",
+    "parse_request",
+]
+
+SCHEMA = "repro.serve/v1"
+KINDS = ("ne_solve", "calibrate", "campaign")
+
+#: hard caps on traced shapes a request can demand (DoS guard: these bound
+#: every compiled-program bucket the service can be asked to create).
+N_MAX = 512          # nodes per game
+CAMPAIGN_N_MAX = 64  # clients per campaign
+ROUNDS_MAX = 500     # campaign scan length
+GRID_MAX = 1025      # γ-grid rows a calibrate request may expand into
+ITERS_MAX = 2000     # solver iteration ceilings
+
+
+class RequestError(ValueError):
+    """A request failed validation — typed, never a trace-time crash.
+
+    Attributes:
+        code: stable machine-readable discriminator (``bad_schema``,
+            ``bad_kind``, ``missing_field``, ``unknown_field``,
+            ``bad_type``, ``bad_value``, ``too_large``).
+        field: the offending field name, when one is identifiable.
+    """
+
+    def __init__(self, code: str, message: str, *, field: str | None = None):
+        super().__init__(message)
+        self.code = code
+        self.field = field
+        self.message = message
+
+    def to_dict(self) -> dict[str, Any]:
+        """The JSON error body an error :class:`Response` carries."""
+        out: dict[str, Any] = {"code": self.code, "message": self.message}
+        if self.field is not None:
+            out["field"] = self.field
+        return out
+
+
+# ---------------------------------------------------------------------------
+# field validators
+# ---------------------------------------------------------------------------
+
+def _is_num(v: Any) -> bool:
+    # bool is an int subclass but "participation = True" is a payload bug.
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _num(obj: Mapping, field: str, default=None, *, lo=None, hi=None,
+         lo_open=False, finite=True) -> float:
+    v = obj.get(field, default)
+    if v is None:
+        raise RequestError("missing_field", f"{field!r} is required",
+                           field=field)
+    if not _is_num(v):
+        raise RequestError("bad_type", f"{field!r} must be a number, "
+                           f"got {type(v).__name__}", field=field)
+    v = float(v)
+    if finite and not math.isfinite(v):
+        raise RequestError("bad_value", f"{field!r} must be finite",
+                           field=field)
+    if lo is not None and (v <= lo if lo_open else v < lo):
+        op = ">" if lo_open else ">="
+        raise RequestError("bad_value", f"{field!r} must be {op} {lo}, "
+                           f"got {v}", field=field)
+    if hi is not None and v > hi:
+        raise RequestError("bad_value", f"{field!r} must be <= {hi}, "
+                           f"got {v}", field=field)
+    return v
+
+
+def _int(obj: Mapping, field: str, default=None, *, lo=None,
+         hi=None) -> int:
+    v = obj.get(field, default)
+    if v is None:
+        raise RequestError("missing_field", f"{field!r} is required",
+                           field=field)
+    if not isinstance(v, int) or isinstance(v, bool):
+        raise RequestError("bad_type", f"{field!r} must be an integer, "
+                           f"got {type(v).__name__}", field=field)
+    if lo is not None and v < lo:
+        raise RequestError("bad_value", f"{field!r} must be >= {lo}, "
+                           f"got {v}", field=field)
+    if hi is not None and v > hi:
+        code = "too_large" if hi in (N_MAX, CAMPAIGN_N_MAX, ROUNDS_MAX,
+                                     GRID_MAX, ITERS_MAX) else "bad_value"
+        raise RequestError(code, f"{field!r} must be <= {hi}, got {v}",
+                           field=field)
+    return int(v)
+
+
+def _vec(obj: Mapping, field: str, *, n=None, lo=None, hi=None,
+         lo_open=False, max_len=N_MAX) -> tuple[float, ...]:
+    v = obj.get(field)
+    if v is None:
+        raise RequestError("missing_field", f"{field!r} is required",
+                           field=field)
+    if not isinstance(v, (list, tuple)):
+        raise RequestError("bad_type", f"{field!r} must be a list, "
+                           f"got {type(v).__name__}", field=field)
+    if len(v) == 0:
+        raise RequestError("bad_value", f"{field!r} must be non-empty",
+                           field=field)
+    if len(v) > max_len:
+        raise RequestError("too_large", f"{field!r} has {len(v)} entries, "
+                           f"cap is {max_len}", field=field)
+    if n is not None and len(v) != n:
+        raise RequestError("bad_value", f"{field!r} must have {n} entries, "
+                           f"got {len(v)}", field=field)
+    out = []
+    for i, x in enumerate(v):
+        if not _is_num(x) or not math.isfinite(float(x)):
+            raise RequestError("bad_value", f"{field}[{i}] must be a finite "
+                               f"number", field=field)
+        x = float(x)
+        if lo is not None and (x <= lo if lo_open else x < lo):
+            op = ">" if lo_open else ">="
+            raise RequestError("bad_value", f"{field}[{i}] must be {op} "
+                               f"{lo}, got {x}", field=field)
+        if hi is not None and x > hi:
+            raise RequestError("bad_value", f"{field}[{i}] must be <= {hi}, "
+                               f"got {x}", field=field)
+        out.append(x)
+    return tuple(out)
+
+
+def _check_fields(obj: Mapping, allowed: frozenset) -> None:
+    for k in obj:
+        if k not in allowed:
+            raise RequestError("unknown_field", f"unknown field {k!r} "
+                               f"(allowed: {sorted(allowed)})", field=str(k))
+
+
+def _request_id(obj: Mapping) -> str | int | None:
+    rid = obj.get("id")
+    if rid is not None and not isinstance(rid, (str, int)) \
+            or isinstance(rid, bool):
+        raise RequestError("bad_type", "'id' must be a string or integer",
+                           field="id")
+    return rid
+
+
+# ---------------------------------------------------------------------------
+# duration spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DurationSpec:
+    """How a request specifies its round-duration model d(k).
+
+    Either the analytic surrogate (``d_inf``/``slope``/``horizon`` →
+    :func:`repro.core.duration.theoretical_duration` at the request's N) or
+    an explicit ``table`` of N+1 values d(0..N). Hashable, so the service
+    can cache materialized tables per (spec, N).
+    """
+
+    d_inf: float = 35.0
+    slope: float = 8.0
+    horizon: float = 500.0
+    table: tuple[float, ...] | None = None
+
+    @staticmethod
+    def parse(obj: Any, *, n: int) -> "DurationSpec":
+        if obj is None:
+            return DurationSpec()
+        if not isinstance(obj, Mapping):
+            raise RequestError("bad_type", "'dur' must be an object",
+                               field="dur")
+        _check_fields(obj, frozenset({"d_inf", "slope", "horizon", "table"}))
+        if "table" in obj and obj["table"] is not None:
+            if len(obj) > 1:
+                raise RequestError("bad_value", "'dur.table' excludes the "
+                                   "analytic fields", field="dur")
+            tab = _vec({"table": obj["table"]}, "table", n=n + 1, lo=0.0,
+                       max_len=N_MAX + 1)
+            return DurationSpec(table=tab)
+        return DurationSpec(
+            d_inf=_num(obj, "d_inf", 35.0, lo=0.0, lo_open=True),
+            slope=_num(obj, "slope", 8.0, lo=0.0),
+            horizon=_num(obj, "horizon", 500.0, lo=0.0, lo_open=True))
+
+    def to_dict(self) -> dict[str, Any]:
+        if self.table is not None:
+            return {"table": list(self.table)}
+        return {"d_inf": self.d_inf, "slope": self.slope,
+                "horizon": self.horizon}
+
+
+# ---------------------------------------------------------------------------
+# request families
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NESolveRequest:
+    """One heterogeneous-NE solve: per-node costs/γ → certified profile."""
+
+    costs: tuple[float, ...]
+    gammas: tuple[float, ...]
+    dur: DurationSpec
+    damping: float = 0.5
+    max_iters: int = 200
+    tol: float = 1e-5
+    verify_grid: int = 64
+    id: str | int | None = None
+
+    kind = "ne_solve"
+
+    @property
+    def n(self) -> int:
+        return len(self.costs)
+
+    def to_dict(self) -> dict[str, Any]:
+        out = {"schema": SCHEMA, "kind": self.kind,
+               "costs": list(self.costs), "gammas": list(self.gammas),
+               "dur": self.dur.to_dict(), "damping": self.damping,
+               "max_iters": self.max_iters, "tol": self.tol,
+               "verify_grid": self.verify_grid}
+        if self.id is not None:
+            out["id"] = self.id
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrateRequest:
+    """Smallest uniform AoI weight γ* hitting a PoA target (γ-grid scan)."""
+
+    n_nodes: int
+    cost: float
+    dur: DurationSpec
+    gamma0: float = 0.0
+    target_poa: float = 1.05
+    gamma_max: float = 5.0
+    grid: int = 33
+    ne_grid: int = 400
+    opt_grid: int = 2000
+    id: str | int | None = None
+
+    kind = "calibrate"
+
+    @property
+    def n(self) -> int:
+        return self.n_nodes
+
+    def to_dict(self) -> dict[str, Any]:
+        out = {"schema": SCHEMA, "kind": self.kind, "n_nodes": self.n_nodes,
+               "cost": self.cost, "dur": self.dur.to_dict(),
+               "gamma0": self.gamma0, "target_poa": self.target_poa,
+               "gamma_max": self.gamma_max, "grid": self.grid,
+               "ne_grid": self.ne_grid, "opt_grid": self.opt_grid}
+        if self.id is not None:
+            out["id"] = self.id
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignRequest:
+    """One FedAvg campaign scenario on the service's task."""
+
+    p: tuple[float, ...]          # per-node participation, length n_clients
+    n_clients: int = 5
+    rounds: int = 8
+    local_steps: int = 1
+    batch_per_client: int = 8
+    target_acc: float = 0.73
+    consecutive: int = 3
+    seed: int = 0
+    e_participant_j: float | None = None   # None: service default rates
+    e_idle_j: float | None = None
+    id: str | int | None = None
+
+    kind = "campaign"
+
+    @property
+    def n(self) -> int:
+        return self.n_clients
+
+    def to_dict(self) -> dict[str, Any]:
+        out = {"schema": SCHEMA, "kind": self.kind, "p": list(self.p),
+               "n_clients": self.n_clients, "rounds": self.rounds,
+               "local_steps": self.local_steps,
+               "batch_per_client": self.batch_per_client,
+               "target_acc": self.target_acc,
+               "consecutive": self.consecutive, "seed": self.seed,
+               "e_participant_j": self.e_participant_j,
+               "e_idle_j": self.e_idle_j}
+        if self.id is not None:
+            out["id"] = self.id
+        return out
+
+
+Request = NESolveRequest | CalibrateRequest | CampaignRequest
+
+_COMMON = frozenset({"schema", "kind", "id"})
+_NE_FIELDS = _COMMON | frozenset({"costs", "gammas", "dur", "damping",
+                                  "max_iters", "tol", "verify_grid"})
+_CAL_FIELDS = _COMMON | frozenset({"n_nodes", "cost", "dur", "gamma0",
+                                   "target_poa", "gamma_max", "grid",
+                                   "ne_grid", "opt_grid"})
+_CAMPAIGN_FIELDS = _COMMON | frozenset({
+    "p", "n_clients", "rounds", "local_steps", "batch_per_client",
+    "target_acc", "consecutive", "seed", "e_participant_j", "e_idle_j"})
+
+
+def _parse_ne(obj: Mapping) -> NESolveRequest:
+    _check_fields(obj, _NE_FIELDS)
+    costs = _vec(obj, "costs", lo=0.0)
+    n = len(costs)
+    gammas_raw = obj.get("gammas", 0.0)
+    if _is_num(gammas_raw):
+        gammas = (float(gammas_raw),) * n
+        if not math.isfinite(gammas[0]) or gammas[0] < 0.0:
+            raise RequestError("bad_value", "'gammas' must be finite >= 0",
+                               field="gammas")
+    else:
+        gammas = _vec(obj, "gammas", n=n, lo=0.0)
+    return NESolveRequest(
+        costs=costs, gammas=gammas,
+        dur=DurationSpec.parse(obj.get("dur"), n=n),
+        damping=_num(obj, "damping", 0.5, lo=0.0, hi=1.0, lo_open=True),
+        max_iters=_int(obj, "max_iters", 200, lo=1, hi=ITERS_MAX),
+        tol=_num(obj, "tol", 1e-5, lo=0.0, lo_open=True),
+        verify_grid=_int(obj, "verify_grid", 64, lo=2, hi=GRID_MAX),
+        id=_request_id(obj))
+
+
+def _parse_calibrate(obj: Mapping) -> CalibrateRequest:
+    _check_fields(obj, _CAL_FIELDS)
+    n = _int(obj, "n_nodes", lo=2, hi=N_MAX)
+    return CalibrateRequest(
+        n_nodes=n,
+        cost=_num(obj, "cost", lo=0.0),
+        dur=DurationSpec.parse(obj.get("dur"), n=n),
+        gamma0=_num(obj, "gamma0", 0.0, lo=0.0),
+        target_poa=_num(obj, "target_poa", 1.05, lo=1.0, lo_open=True),
+        gamma_max=_num(obj, "gamma_max", 5.0, lo=0.0, lo_open=True),
+        grid=_int(obj, "grid", 33, lo=2, hi=GRID_MAX),
+        ne_grid=_int(obj, "ne_grid", 400, lo=8, hi=10_000),
+        opt_grid=_int(obj, "opt_grid", 2000, lo=8, hi=10_000),
+        id=_request_id(obj))
+
+
+def _parse_campaign(obj: Mapping) -> CampaignRequest:
+    _check_fields(obj, _CAMPAIGN_FIELDS)
+    n = _int(obj, "n_clients", 5, lo=1, hi=CAMPAIGN_N_MAX)
+    p_raw = obj.get("p")
+    if _is_num(p_raw):
+        if not (0.0 < float(p_raw) <= 1.0):
+            raise RequestError("bad_value", "'p' must be in (0, 1]",
+                               field="p")
+        p = (float(p_raw),) * n
+    else:
+        p = _vec(obj, "p", n=n, lo=0.0, hi=1.0, lo_open=True,
+                 max_len=CAMPAIGN_N_MAX)
+    e_part = obj.get("e_participant_j")
+    e_idle = obj.get("e_idle_j")
+    if e_part is not None:
+        e_part = _num(obj, "e_participant_j", lo=0.0)
+    if e_idle is not None:
+        e_idle = _num(obj, "e_idle_j", lo=0.0)
+    return CampaignRequest(
+        p=p, n_clients=n,
+        rounds=_int(obj, "rounds", 8, lo=1, hi=ROUNDS_MAX),
+        local_steps=_int(obj, "local_steps", 1, lo=1, hi=100),
+        batch_per_client=_int(obj, "batch_per_client", 8, lo=1, hi=1024),
+        target_acc=_num(obj, "target_acc", 0.73, lo=0.0, hi=1.0,
+                        lo_open=True),
+        consecutive=_int(obj, "consecutive", 3, lo=1, hi=100),
+        seed=_int(obj, "seed", 0, lo=0, hi=2**32 - 1),
+        e_participant_j=e_part, e_idle_j=e_idle,
+        id=_request_id(obj))
+
+
+_PARSERS = {"ne_solve": _parse_ne, "calibrate": _parse_calibrate,
+            "campaign": _parse_campaign}
+
+
+def parse_request(obj: Any) -> Request:
+    """Validate one request payload into its typed form (or raise).
+
+    Raises:
+        RequestError: with a stable ``code``/``field`` for every possible
+            malformation — unknown kind, missing/unknown fields, wrong
+            types, out-of-range values, shape caps. Any non-mapping input
+            is ``bad_request``.
+    """
+    if not isinstance(obj, Mapping):
+        raise RequestError("bad_request", "request must be a JSON object, "
+                           f"got {type(obj).__name__}")
+    schema = obj.get("schema", SCHEMA)
+    if schema != SCHEMA:
+        raise RequestError("bad_schema", f"schema {schema!r}, want "
+                           f"{SCHEMA!r}", field="schema")
+    kind = obj.get("kind")
+    if kind not in _PARSERS:
+        raise RequestError("bad_kind", f"kind {kind!r}, want one of "
+                           f"{KINDS}", field="kind")
+    return _PARSERS[kind](obj)
+
+
+# ---------------------------------------------------------------------------
+# responses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    """One completed (or rejected) request, JSON-able via :meth:`to_dict`.
+
+    ``result`` carries the kind-specific payload (profiles, γ*, campaign
+    summary); ``error`` is a :meth:`RequestError.to_dict` body when
+    ``ok`` is False. Serving metadata: ``bucket`` (the compiled-program
+    bucket label that served it), ``latency_us`` (submit → result on
+    host), ``queue_us`` (submit → dispatch).
+    """
+
+    rid: int
+    kind: str
+    ok: bool
+    result: dict[str, Any] | None = None
+    error: dict[str, Any] | None = None
+    id: str | int | None = None
+    bucket: str | None = None
+    latency_us: float | None = None
+    queue_us: float | None = None
+
+    def to_dict(self) -> dict[str, Any]:
+        out: dict[str, Any] = {"schema": SCHEMA, "rid": self.rid,
+                               "kind": self.kind, "ok": self.ok}
+        if self.id is not None:
+            out["id"] = self.id
+        if self.result is not None:
+            out["result"] = self.result
+        if self.error is not None:
+            out["error"] = self.error
+        if self.bucket is not None:
+            out["bucket"] = self.bucket
+        if self.latency_us is not None:
+            out["latency_us"] = round(self.latency_us, 1)
+        if self.queue_us is not None:
+            out["queue_us"] = round(self.queue_us, 1)
+        return out

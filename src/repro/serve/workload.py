@@ -1,0 +1,91 @@
+"""Synthetic request traffic for the sweep service.
+
+One deterministic generator shared by the closed-loop load benchmark
+(``benchmarks/serve_load.py``), the driver's demo mode
+(``python -m repro.launch.serve_sweeps``) and the request-level tests: a
+seeded mix of NE-solve / calibrate / campaign payloads over a small set of
+fleet sizes (so traffic actually exercises the bucket ladder and the
+program cache), with an optional fraction of malformed payloads to keep
+the typed-rejection path hot.
+
+Calibrate rows default to coarse ``ne_grid``/``opt_grid`` values — load
+traffic measures the serving layer, not mechanism-design accuracy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.schema import SCHEMA
+
+__all__ = ["synthetic_workload"]
+
+# kept intentionally small: CPU CI serves the full mixed workload
+_NE_SIZES = (4, 6, 8)
+_SYM_SIZES = (6, 10)
+_CAMPAIGN_CLIENTS = 4
+_CAMPAIGN_ROUNDS = 3
+
+
+def _malformed(rng: np.random.Generator) -> dict:
+    """A payload that must be rejected with a typed error."""
+    bad = rng.integers(5)
+    if bad == 0:
+        return {"schema": "repro.serve/v999", "kind": "ne_solve",
+                "costs": [0.1]}
+    if bad == 1:
+        return {"schema": SCHEMA, "kind": "teleport"}
+    if bad == 2:
+        return {"schema": SCHEMA, "kind": "ne_solve",
+                "costs": [0.1, float("nan")]}
+    if bad == 3:
+        return {"schema": SCHEMA, "kind": "calibrate", "n_nodes": 6,
+                "cost": 0.1, "grid": -3}
+    return {"schema": SCHEMA, "kind": "campaign", "p": 0.5,
+            "surprise": True}
+
+
+def synthetic_workload(n_requests: int, *, seed: int = 0,
+                       malformed_frac: float = 0.02,
+                       campaign_frac: float = 0.03,
+                       calibrate_frac: float = 0.15) -> list[dict]:
+    """``n_requests`` raw payload dicts: mostly NE solves, a calibrate
+    stream, a trickle of campaigns, and a few malformed payloads.
+
+    Deterministic in ``seed``; families are interleaved (shuffled), so the
+    queue exercises mixed-family grouping on every poll.
+    """
+    rng = np.random.default_rng(seed)
+    payloads: list[dict] = []
+    for i in range(n_requests):
+        u = rng.random()
+        if u < malformed_frac:
+            payloads.append(_malformed(rng))
+        elif u < malformed_frac + campaign_frac:
+            payloads.append({
+                "schema": SCHEMA, "kind": "campaign",
+                "id": f"load-{i}",
+                "p": [round(float(p), 3) for p in
+                      rng.uniform(0.2, 0.9, _CAMPAIGN_CLIENTS)],
+                "n_clients": _CAMPAIGN_CLIENTS,
+                "rounds": _CAMPAIGN_ROUNDS,
+                "seed": int(rng.integers(1 << 16)),
+            })
+        elif u < malformed_frac + campaign_frac + calibrate_frac:
+            n = int(rng.choice(_SYM_SIZES))
+            payloads.append({
+                "schema": SCHEMA, "kind": "calibrate",
+                "id": f"load-{i}", "n_nodes": n,
+                "cost": round(float(rng.uniform(0.02, 0.3)), 4),
+                "grid": 7, "gamma_max": 3.0,
+                "ne_grid": 160, "opt_grid": 400,
+            })
+        else:
+            n = int(rng.choice(_NE_SIZES))
+            payloads.append({
+                "schema": SCHEMA, "kind": "ne_solve",
+                "id": f"load-{i}",
+                "costs": [round(float(c), 4) for c in
+                          rng.uniform(0.02, 0.4, n)],
+                "gammas": round(float(rng.uniform(0.5, 2.5)), 3),
+            })
+    return payloads

@@ -72,3 +72,40 @@ def test_batcher_stats_drain():
     b.run()
     st = b.stats()
     assert st["finished"] == 4 and st["queued"] == 0 and st["active"] == 0
+
+
+def test_batcher_completion_order_not_submit_order():
+    """Continuous batching finishes short requests first: result order is
+    completion order, not enqueue order (the queue contract the sweep
+    service mirrors, see tests/test_serve.py)."""
+    cfg = ARCHITECTURES["gemma-2b"].reduced()
+    api = get_model(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    b = ContinuousBatcher(api, params, n_slots=2, max_len=32)
+    prompt = np.asarray([1, 2, 3], np.int32)
+    b.submit(Request(rid=0, prompt=prompt, max_new=10))
+    b.submit(Request(rid=1, prompt=prompt, max_new=2))
+    finished = b.run()
+    assert [r.rid for r in finished] == [1, 0]
+    assert len(finished[0].generated) == 2
+    assert len(finished[1].generated) == 10
+
+
+def test_batcher_drains_queue_deeper_than_slots():
+    """6 requests through 2 slots: every one finishes, queue ends empty,
+    and freed slots are reused mid-stream (queued rids start only after
+    an earlier rid completes)."""
+    cfg = ARCHITECTURES["gemma-2b"].reduced()
+    api = get_model(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    b = ContinuousBatcher(api, params, n_slots=2, max_len=16)
+    prompt = np.asarray([1, 2], np.int32)
+    for i in range(6):
+        b.submit(Request(rid=i, prompt=prompt, max_new=2))
+    finished = b.run()
+    assert sorted(r.rid for r in finished) == list(range(6))
+    assert all(len(r.generated) == 2 for r in finished)
+    st = b.stats()
+    assert st["queued"] == 0 and st["active"] == 0 and st["finished"] == 6
+    # identical requests drain in FIFO order through slot reuse
+    assert [r.rid for r in finished] == list(range(6))

@@ -44,3 +44,29 @@ def test_dryrun_driver_single_combo(tmp_path):
     assert "[OK ]" in out.stdout
     files = os.listdir(tmp_path)
     assert len(files) == 1 and files[0].endswith(".json")
+
+
+@pytest.mark.slow
+def test_serve_sweeps_driver_demo(tmp_path):
+    """The sweep-service driver serves a synthetic mixed demo workload:
+    JSONL responses out, cache/latency summary on stderr, events on disk."""
+    import json
+
+    resp_path = tmp_path / "responses.jsonl"
+    events_path = tmp_path / "events.jsonl"
+    out = _run(["repro.launch.serve_sweeps", "--demo", "6",
+                "--max-batch", "4", "--output", str(resp_path),
+                "--events", str(events_path)])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "served 6 responses" in out.stderr
+    assert "cache:" in out.stderr
+    lines = resp_path.read_text().splitlines()
+    assert len(lines) == 6
+    resps = [json.loads(line) for line in lines]
+    assert all(r["schema"] == "repro.serve/v1" for r in resps)
+    assert all(r["ok"] for r in resps)  # seed-0 demo mix is all well-formed
+    assert {r["kind"] for r in resps} == {"ne_solve", "calibrate"}
+    events = [json.loads(line)
+              for line in events_path.read_text().splitlines()]
+    assert sum(e["event"] == "serve.request" for e in events) == 6
+    assert sum(e["event"] == "serve.complete" for e in events) == 6

@@ -140,6 +140,26 @@ def test_event_sink_writes_valid_jsonl(tmp_path):
     assert mid["schema"] == EVENT_SCHEMA and mid["x"] == [0, 1, 2]
 
 
+def test_event_sink_two_sinks_interleave_one_path(tmp_path):
+    """Two sinks sharing a path append whole records — neither truncates
+    the other's stream (append mode + per-record flush)."""
+    path = tmp_path / "shared.jsonl"
+    with EventSink(path) as a, EventSink(path) as b:
+        for i in range(5):
+            a.emit("from_a", i=i)
+            b.emit("from_b", i=i)
+    records = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(records) == 10
+    # per-sink seq streams are intact and monotonic
+    assert [r["seq"] for r in records if r["event"] == "from_a"] == \
+        list(range(5))
+    assert [r["seq"] for r in records if r["event"] == "from_b"] == \
+        list(range(5))
+    # per-record flush preserves emission order across the two sinks
+    assert [(r["event"], r["i"]) for r in records] == \
+        [(e, i) for i in range(5) for e in ("from_a", "from_b")]
+
+
 # ---------------------------------------------------------------------------
 # MetricStream
 # ---------------------------------------------------------------------------

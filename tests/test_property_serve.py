@@ -1,0 +1,108 @@
+"""Hypothesis fuzz over the sweep-service request schema.
+
+The totality property the serving layer leans on: **any** payload either
+parses into a typed request or raises a typed
+:class:`~repro.serve.RequestError` — never any other exception — and every
+valid request survives the ``parse → to_dict → parse`` round trip. Since
+every traced shape and static argument downstream derives from validated
+fields, this is also the "malformed payloads never become trace-time
+crashes" guarantee (the deterministic rejection table lives in
+``tests/test_serve.py``).
+"""
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die, without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve import (SCHEMA, CalibrateRequest, RequestError,  # noqa: E402
+                         parse_request)
+
+_scalar = st.one_of(st.none(), st.booleans(), st.integers(),
+                    st.floats(allow_nan=True, allow_infinity=True),
+                    st.text(max_size=8))
+_jsonish = st.recursive(
+    _scalar,
+    lambda inner: st.one_of(st.lists(inner, max_size=4),
+                            st.dictionaries(st.text(max_size=8), inner,
+                                            max_size=5)),
+    max_leaves=12)
+
+
+@given(payload=_jsonish)
+@settings(max_examples=200)
+def test_fuzz_arbitrary_payloads_never_crash(payload):
+    """Total validation: any junk either parses or raises RequestError."""
+    try:
+        req = parse_request(payload)
+    except RequestError as e:
+        assert e.code and e.message
+    else:
+        assert parse_request(req.to_dict()) == req
+
+
+_kinds = st.sampled_from(["ne_solve", "calibrate", "campaign"])
+
+
+@given(kind=_kinds, payload=st.dictionaries(
+    st.sampled_from(["costs", "gammas", "n_nodes", "cost", "p", "grid",
+                     "rounds", "dur", "seed", "max_iters", "id", "tol"]),
+    _jsonish, max_size=6))
+@settings(max_examples=200)
+def test_fuzz_kindful_payloads_never_crash(kind, payload):
+    """Junk targeted at real field names is still totally validated."""
+    try:
+        req = parse_request({"schema": SCHEMA, "kind": kind, **payload})
+    except RequestError as e:
+        assert e.code and e.message
+    else:
+        assert parse_request(req.to_dict()) == req
+
+
+_costs = st.lists(st.floats(min_value=0.0, max_value=10.0,
+                            allow_nan=False, allow_infinity=False),
+                  min_size=1, max_size=20)
+
+
+@given(costs=_costs,
+       gamma=st.floats(min_value=0.0, max_value=50.0, allow_nan=False),
+       max_iters=st.integers(min_value=1, max_value=2000),
+       verify_grid=st.integers(min_value=2, max_value=1025))
+@settings(max_examples=100)
+def test_fuzz_valid_ne_fields_round_trip(costs, gamma, max_iters,
+                                         verify_grid):
+    req = parse_request({"schema": SCHEMA, "kind": "ne_solve",
+                         "costs": costs, "gammas": gamma,
+                         "max_iters": max_iters,
+                         "verify_grid": verify_grid})
+    assert req.n == len(costs)
+    assert all(math.isfinite(c) for c in req.costs)
+    assert parse_request(req.to_dict()) == req
+
+
+@given(n=st.integers(min_value=2, max_value=512),
+       grid=st.integers(min_value=2, max_value=1025),
+       gamma_max=st.floats(min_value=1e-3, max_value=100.0,
+                           allow_nan=False))
+@settings(max_examples=100)
+def test_fuzz_valid_calibrate_fields_round_trip(n, grid, gamma_max):
+    req = parse_request({"schema": SCHEMA, "kind": "calibrate",
+                         "n_nodes": n, "cost": 0.1, "grid": grid,
+                         "gamma_max": gamma_max})
+    assert isinstance(req, CalibrateRequest) and req.n == n
+    assert parse_request(req.to_dict()) == req
+
+
+@given(rows=st.integers(min_value=1, max_value=500),
+       max_batch=st.sampled_from([1, 2, 4, 8, 16, 32, 64]))
+@settings(max_examples=100)
+def test_fuzz_bucket_ladder_invariants(rows, max_batch):
+    """Rung covers the rows, stays on the ladder, chunks cover exactly."""
+    from repro.serve import batch_rung, chunk_rows
+    rung = batch_rung(min(rows, max_batch), max_batch=max_batch)
+    assert rung >= min(rows, max_batch)
+    assert rung <= max_batch and (rung & (rung - 1)) == 0
+    chunks = chunk_rows(rows, max_batch=max_batch)
+    assert sum(chunks) == rows
+    assert all(1 <= c <= max_batch for c in chunks)

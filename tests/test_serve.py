@@ -1,0 +1,265 @@
+"""Request-level harness for the scenario-sweep service.
+
+Three layers, mirroring the serving stack:
+
+* **Schema** — golden request/response round-trips
+  (``parse_request(req.to_dict()) == req``, canonical serialization) and
+  a typed-error table for every malformation class.
+* **Typed errors** — a rejection table covering every malformation class
+  (the hypothesis fuzz over the same surface lives in
+  ``tests/test_property_serve.py``, following the repo's property-suite
+  convention).
+* **Queue path** — end-to-end through :class:`repro.serve.SweepService`:
+  enqueue order vs. result order, mixed request families interleaved in
+  one queue, malformed payloads surfacing as ``ok=False`` responses
+  mid-stream, and drain-on-shutdown (nothing left queued, sink flushed).
+"""
+import json
+
+import pytest
+
+from repro.serve import (KINDS, SCHEMA, DurationSpec, RequestError,
+                         SweepService, parse_request)
+
+
+# ---------------------------------------------------------------------------
+# golden round-trips
+# ---------------------------------------------------------------------------
+
+GOLDEN = [
+    {"schema": SCHEMA, "kind": "ne_solve",
+     "costs": [0.05, 0.1, 0.2], "gammas": [1.5, 1.0, 2.0]},
+    {"schema": SCHEMA, "kind": "ne_solve", "costs": [0.3, 0.3],
+     "gammas": 0.7, "dur": {"d_inf": 20.0, "slope": 4.0},
+     "damping": 0.4, "max_iters": 50, "tol": 1e-6, "verify_grid": 16,
+     "id": "req-1"},
+    {"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1, 0.2],
+     "dur": {"table": [10.0, 8.0, 7.5]}},
+    {"schema": SCHEMA, "kind": "calibrate", "n_nodes": 6, "cost": 0.1},
+    {"schema": SCHEMA, "kind": "calibrate", "n_nodes": 4, "cost": 0.0,
+     "gamma0": 0.5, "target_poa": 1.2, "gamma_max": 2.0, "grid": 5,
+     "ne_grid": 64, "opt_grid": 64, "id": 7},
+    {"schema": SCHEMA, "kind": "campaign", "p": 0.5},
+    {"schema": SCHEMA, "kind": "campaign", "p": [0.2, 0.9], "n_clients": 2,
+     "rounds": 3, "seed": 11, "e_participant_j": 40.0, "e_idle_j": 1.0},
+]
+
+
+@pytest.mark.parametrize("payload", GOLDEN,
+                         ids=lambda p: f"{p['kind']}-{len(p)}f")
+def test_golden_round_trip(payload):
+    req = parse_request(payload)
+    wire = req.to_dict()
+    # canonical: defaults materialized, re-parse is the identity
+    assert parse_request(wire) == req
+    assert parse_request(wire).to_dict() == wire
+    # the wire form is plain JSON
+    assert json.loads(json.dumps(wire)) == wire
+    assert wire["kind"] in KINDS
+
+
+def test_scalar_broadcast_is_canonicalized():
+    """Scalar gammas/p expand to per-node tuples at parse time."""
+    req = parse_request({"schema": SCHEMA, "kind": "ne_solve",
+                         "costs": [0.1, 0.2, 0.3], "gammas": 1.5})
+    assert req.gammas == (1.5, 1.5, 1.5)
+    camp = parse_request({"schema": SCHEMA, "kind": "campaign", "p": 0.4,
+                          "n_clients": 3})
+    assert camp.p == (0.4, 0.4, 0.4)
+
+
+def test_duration_spec_table_round_trip():
+    req = parse_request({"schema": SCHEMA, "kind": "ne_solve",
+                         "costs": [0.1, 0.2],
+                         "dur": {"table": [9.0, 8.0, 7.0]}})
+    assert req.dur == DurationSpec(table=(9.0, 8.0, 7.0))
+    assert req.dur.to_dict() == {"table": [9.0, 8.0, 7.0]}
+    # hashable: the service caches materialized tables per (spec, n)
+    assert hash(req.dur) == hash(DurationSpec(table=(9.0, 8.0, 7.0)))
+
+
+# ---------------------------------------------------------------------------
+# typed errors
+# ---------------------------------------------------------------------------
+
+BAD = [
+    (42, "bad_request", None),
+    ([1, 2], "bad_request", None),
+    ({"schema": "repro.serve/v0", "kind": "ne_solve", "costs": [0.1]},
+     "bad_schema", "schema"),
+    ({"schema": SCHEMA, "kind": "teleport"}, "bad_kind", "kind"),
+    ({"schema": SCHEMA}, "bad_kind", "kind"),
+    ({"schema": SCHEMA, "kind": "ne_solve"}, "missing_field", "costs"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1],
+      "surprise": 1}, "unknown_field", "surprise"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": "cheap"},
+     "bad_type", "costs"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": []},
+     "bad_value", "costs"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1, float("nan")]},
+     "bad_value", "costs"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1, -0.5]},
+     "bad_value", "costs"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1],
+      "gammas": [1.0, 2.0]}, "bad_value", "gammas"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1],
+      "damping": True}, "bad_type", "damping"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1],
+      "max_iters": 10**9}, "too_large", "max_iters"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1] * 513},
+     "too_large", "costs"),
+    ({"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1, 0.2],
+      "dur": {"table": [1.0, 2.0]}}, "bad_value", "table"),
+    ({"schema": SCHEMA, "kind": "calibrate", "cost": 0.1},
+     "missing_field", "n_nodes"),
+    ({"schema": SCHEMA, "kind": "calibrate", "n_nodes": 6, "cost": 0.1,
+      "grid": -3}, "bad_value", "grid"),
+    ({"schema": SCHEMA, "kind": "calibrate", "n_nodes": 6, "cost": 0.1,
+      "grid": 2.5}, "bad_type", "grid"),
+    ({"schema": SCHEMA, "kind": "calibrate", "n_nodes": 6, "cost": 0.1,
+      "target_poa": 1.0}, "bad_value", "target_poa"),
+    ({"schema": SCHEMA, "kind": "campaign", "p": 0.0}, "bad_value", "p"),
+    ({"schema": SCHEMA, "kind": "campaign", "p": [0.5, 1.5],
+      "n_clients": 2}, "bad_value", "p"),
+    ({"schema": SCHEMA, "kind": "campaign", "p": 0.5, "rounds": 100000},
+     "too_large", "rounds"),
+    ({"schema": SCHEMA, "kind": "campaign", "p": 0.5, "id": True},
+     "bad_type", "id"),
+]
+
+
+@pytest.mark.parametrize("payload,code,field", BAD,
+                         ids=[f"{i}-{c}" for i, (_, c, _f) in enumerate(BAD)])
+def test_typed_rejections(payload, code, field):
+    with pytest.raises(RequestError) as exc:
+        parse_request(payload)
+    assert exc.value.code == code
+    assert exc.value.field == field
+    body = exc.value.to_dict()
+    assert body["code"] == code and body["message"]
+    assert json.loads(json.dumps(body)) == body
+
+
+# ---------------------------------------------------------------------------
+# queue path end-to-end (small shapes; compiles are shared via the
+# module-scoped service)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def svc():
+    from repro.federated.tasks import synthetic_mlp_task
+    from repro.optim import sgd
+    service = SweepService(max_batch=8,
+                           task=synthetic_mlp_task(image_shape=(4, 4, 1),
+                                                   hidden=4, val_size=32),
+                           opt=sgd(0.15))
+    yield service
+    service.close()
+
+
+def _ne(i, n=3):
+    return {"schema": SCHEMA, "kind": "ne_solve", "id": f"ne-{i}",
+            "costs": [0.05 * (j + 1) for j in range(n)], "gammas": 1.0}
+
+
+def _cal(i):
+    return {"schema": SCHEMA, "kind": "calibrate", "id": f"cal-{i}",
+            "n_nodes": 4, "cost": 0.1, "grid": 3, "gamma_max": 2.0,
+            "ne_grid": 32, "opt_grid": 32}
+
+
+def test_mixed_families_one_queue(svc):
+    """Interleaved families batch per family; ids map results back."""
+    payloads = [_ne(0), _cal(0), _ne(1), _cal(1), _ne(2)]
+    rids = [svc.submit(p) for p in payloads]
+    assert rids == sorted(rids)
+    resps = svc.poll()
+    assert [r.rid for r in resps] != rids  # grouped: not submit order
+    assert sorted(r.rid for r in resps) == rids
+    by_id = {r.id: r for r in resps}
+    assert set(by_id) == {"ne-0", "ne-1", "ne-2", "cal-0", "cal-1"}
+    for r in resps:
+        assert r.ok and r.bucket and r.latency_us > 0
+        assert r.queue_us <= r.latency_us
+    # one dispatch per family: same bucket label within a family
+    assert len({by_id[f"ne-{i}"].bucket for i in range(3)}) == 1
+    assert len({by_id[f"cal-{i}"].bucket for i in range(2)}) == 1
+
+
+def test_enqueue_order_preserved_within_family(svc):
+    reqs = [_ne(i) for i in range(5)]
+    rids = [svc.submit(p) for p in reqs]
+    resps = svc.poll()
+    assert [r.rid for r in resps] == rids  # single family: FIFO
+    assert [r.id for r in resps] == [f"ne-{i}" for i in range(5)]
+
+
+def test_malformed_mid_stream_becomes_error_response(svc):
+    payloads = [_ne(0), {"schema": SCHEMA, "kind": "teleport"}, _ne(1),
+                {"schema": SCHEMA, "kind": "ne_solve", "costs": []}]
+    resps = svc.serve(payloads)
+    ok = [r for r in resps if r.ok]
+    bad = [r for r in resps if not r.ok]
+    assert len(ok) == 2 and len(bad) == 2
+    assert {b.error["code"] for b in bad} == {"bad_kind", "bad_value"}
+    assert all(b.result is None for b in bad)
+
+
+def test_drain_on_shutdown(tmp_path):
+    """serve() drains everything; close() flushes the sink's JSONL."""
+    from repro.obs import EventSink
+    path = tmp_path / "serve_events.jsonl"
+    with EventSink(path) as sink:
+        with SweepService(max_batch=4, sink=sink) as service:
+            resps = service.serve([_ne(i) for i in range(3)])
+            assert len(resps) == 3 and all(r.ok for r in resps)
+            assert service.poll() == []  # nothing left queued
+            stats = service.stats()
+    assert stats["requests"]["completed"] == 3
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    events = [rec["event"] for rec in lines]
+    assert events.count("serve.request") == 3
+    assert events.count("serve.complete") == 3
+    assert "serve.dispatch" in events
+    seqs = [rec["seq"] for rec in lines]
+    assert seqs == sorted(seqs)
+
+
+def test_campaign_request_end_to_end(svc):
+    resp, = svc.serve([{"schema": SCHEMA, "kind": "campaign",
+                        "p": [0.5, 0.8], "n_clients": 2, "rounds": 2,
+                        "seed": 1}])
+    assert resp.ok and resp.kind == "campaign"
+    res = resp.result
+    assert res["rounds"] <= 2 and res["energy_wh"] > 0
+    assert 0.0 <= res["participation_rate"] <= 1.0
+    assert isinstance(res["converged"], bool)
+
+
+def test_stats_shape(svc):
+    svc.serve([_ne(0)])
+    stats = svc.stats()
+    assert stats["requests"]["completed"] >= 1
+    assert 0.0 <= stats["cache"]["hit_rate"] <= 1.0
+    assert 0.0 <= stats["padding_overhead"] < 1.0
+    assert stats["latency"]["p50_us"] > 0
+    for bucket_stats in stats["compile"].values():
+        assert bucket_stats["compile_s"] >= 0
+        assert bucket_stats["calls"] >= 1
+    # JSON-able end to end (the BENCH artifact path)
+    json.dumps(stats)
+
+
+def test_workload_generator_is_deterministic_and_parseable():
+    from repro.serve.workload import synthetic_workload
+    w1 = synthetic_workload(50, seed=3)
+    w2 = synthetic_workload(50, seed=3)
+    assert w1 == w2
+    parsed = rejected = 0
+    for payload in w1:
+        try:
+            parse_request(payload)
+            parsed += 1
+        except RequestError:
+            rejected += 1
+    assert parsed + rejected == 50 and parsed > rejected

@@ -1,0 +1,245 @@
+"""Bucketing correctness: padded-and-sliced == direct, caches prove it.
+
+The serving layer's load-bearing claims, pinned per request family:
+
+* **Bitwise parity** — a request served through a padded bucket (edge-
+  replica lanes, sliced back) returns results bitwise-equal to calling
+  the direct engine (`solve_heterogeneous` + certification,
+  `solve_batched`, `run_campaigns`) on the unpadded inputs. The service
+  AOT-compiles the *same* jitted callables the direct paths run, so this
+  holds exactly, not to tolerance.
+* **Deterministic bucket selection** — same request fields + row count →
+  same bucket, and the ladder/chunk policy is a pure function.
+* **Compiled-program cache** — the second same-bucket request compiles
+  nothing: program count and per-bucket compile stats are flat while the
+  hit counter moves.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (SCHEMA, Bucket, SweepService, batch_rung,
+                         bucket_for, chunk_rows, group_key, parse_request)
+
+# ---------------------------------------------------------------------------
+# pure bucketing policy
+# ---------------------------------------------------------------------------
+
+
+def test_batch_rung_ladder():
+    assert [batch_rung(r) for r in (1, 2, 3, 5, 8, 9, 33, 64, 500)] == \
+        [1, 2, 4, 8, 8, 16, 64, 64, 64]
+    assert batch_rung(7, max_batch=4) == 4
+    with pytest.raises(ValueError):
+        batch_rung(0)
+
+
+def test_chunk_rows_covers_exactly():
+    assert chunk_rows(150, max_batch=64) == [64, 64, 22]
+    assert chunk_rows(64, max_batch=64) == [64]
+    assert chunk_rows(1, max_batch=64) == [1]
+    for rows in (1, 7, 64, 129):
+        assert sum(chunk_rows(rows, max_batch=32)) == rows
+
+
+def test_bucket_selection_deterministic():
+    req = parse_request({"schema": SCHEMA, "kind": "ne_solve",
+                         "costs": [0.1, 0.2, 0.3], "gammas": 1.0})
+    b1 = bucket_for(req, 3)
+    b2 = bucket_for(parse_request(req.to_dict()), 3)
+    assert b1 == b2 and hash(b1) == hash(b2)
+    assert b1.family == "ne" and b1.n == 3 and b1.batch == 4
+    assert b1.label == "ne/n3/b4"
+    # row count maps through the ladder; N is never padded
+    assert bucket_for(req, 5).batch == 8
+    assert bucket_for(req, 5).n == 3
+
+
+def test_bucket_statics_split_programs():
+    """Different statics (solver knobs) are different buckets."""
+    base = {"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1, 0.2]}
+    r1 = parse_request(base)
+    r2 = parse_request({**base, "max_iters": 99})
+    assert bucket_for(r1, 1) != bucket_for(r2, 1)
+    assert bucket_for(r1, 1) == bucket_for(parse_request(dict(base)), 1)
+
+
+def test_group_key_separates_duration_models():
+    """Calibrate rows share one d_tab per dispatch: dur is in the key."""
+    a = parse_request({"schema": SCHEMA, "kind": "calibrate", "n_nodes": 4,
+                       "cost": 0.1})
+    b = parse_request({"schema": SCHEMA, "kind": "calibrate", "n_nodes": 4,
+                       "cost": 0.2, "dur": {"d_inf": 20.0}})
+    c = parse_request({"schema": SCHEMA, "kind": "calibrate", "n_nodes": 4,
+                       "cost": 0.3})
+    assert group_key(a) != group_key(b)
+    assert group_key(a) == group_key(c)  # cost is row data, not shared
+
+
+def test_bucket_mesh_rounding():
+    req = parse_request({"schema": SCHEMA, "kind": "ne_solve",
+                         "costs": [0.1, 0.2]})
+    assert bucket_for(req, 3, mesh_axes=(8,)).batch == 8
+    assert bucket_for(req, 9, mesh_axes=(8,)).batch == 16
+    assert isinstance(bucket_for(req, 3), Bucket)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity per request family
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def task():
+    from repro.federated.tasks import synthetic_mlp_task
+    return synthetic_mlp_task(image_shape=(4, 4, 1), hidden=4, val_size=32)
+
+
+@pytest.fixture(scope="module")
+def svc(task):
+    from repro.optim import sgd
+    service = SweepService(max_batch=8, task=task, opt=sgd(0.15))
+    yield service
+    service.close()
+
+
+def test_ne_padded_bitwise_equals_direct(svc):
+    """3 rows pad to a b4 bucket; every lane matches the direct solve."""
+    from repro.core.asymmetric_batched import (solve_heterogeneous,
+                                               verify_equilibrium_batched)
+    from repro.core.duration import theoretical_duration
+
+    costs = [[0.05, 0.1, 0.2], [0.3, 0.02, 0.15], [0.12, 0.12, 0.12]]
+    gammas = [[1.5, 1.0, 2.0], [0.5, 0.5, 0.5], [2.0, 1.0, 0.1]]
+    resps = svc.serve([
+        {"schema": SCHEMA, "kind": "ne_solve", "costs": c, "gammas": g}
+        for c, g in zip(costs, gammas)])
+    assert [r.ok for r in resps] == [True] * 3
+    assert {r.bucket for r in resps} == {"ne/n3/b4"}  # padded 3 -> 4
+
+    dur = theoretical_duration(3, d_inf=35.0, slope=8.0, horizon=500.0)
+    sol = solve_heterogeneous(jnp.asarray(costs), jnp.asarray(gammas), dur)
+    dev = verify_equilibrium_batched(jnp.asarray(costs),
+                                     jnp.asarray(gammas), dur, sol.p)
+    for i, r in enumerate(resps):
+        np.testing.assert_array_equal(np.asarray(r.result["p"]),
+                                      np.asarray(sol.p[i]))
+        assert r.result["converged"] == bool(sol.converged[i])
+        assert r.result["iters"] == int(sol.iters[i])
+        assert r.result["deviation"] == float(dev[i])
+
+
+def test_calibrate_padded_bitwise_equals_direct(svc):
+    """A γ-grid expansion padded to the rung == solve_batched directly."""
+    from repro.core.duration import theoretical_duration
+    from repro.mechanisms.batched import solve_batched
+
+    grid, gamma_max, cost, n = 5, 2.0, 0.1, 4
+    resp, = svc.serve([{"schema": SCHEMA, "kind": "calibrate",
+                        "n_nodes": n, "cost": cost, "grid": grid,
+                        "gamma_max": gamma_max, "ne_grid": 32,
+                        "opt_grid": 32}])
+    assert resp.ok
+
+    gammas = np.linspace(0.0, gamma_max, grid)
+    direct = solve_batched(
+        jnp.asarray(gammas), jnp.full(grid, cost),
+        theoretical_duration(n, d_inf=35.0, slope=8.0, horizon=500.0),
+        ne_grid=32, opt_grid=32)
+    poa = np.asarray(direct.poa)
+    ok = np.isfinite(poa) & (poa <= 1.05)
+    first = int(np.argmax(ok)) if ok.any() else int(np.argmin(poa))
+    assert resp.result["achieved"] == bool(ok.any())
+    assert resp.result["gamma_star"] == float(gammas[first])
+    assert resp.result["poa"] == float(poa[first])
+    assert resp.result["p_ne"] == float(direct.worst_ne[first])
+    assert resp.result["opt_cost"] == float(direct.opt_cost[first])
+
+
+def test_campaign_padded_bitwise_equals_direct(svc, task):
+    """A single campaign row served in a padded bucket == run_campaigns."""
+    from repro.federated.campaign import run_campaigns
+    from repro.federated.simulation import FLConfig
+    from repro.optim import sgd
+
+    p = [0.5, 0.8]
+    resps = svc.serve([
+        {"schema": SCHEMA, "kind": "campaign", "p": p, "n_clients": 2,
+         "rounds": 2, "seed": s} for s in (1, 2, 3)])
+    assert [r.ok for r in resps] == [True] * 3
+    assert {r.bucket for r in resps} == {"campaign/n2/b4"}
+
+    fl = FLConfig(n_clients=2, local_steps=1, batch_per_client=8,
+                  max_rounds=2, target_acc=0.73, consecutive=3)
+    direct = run_campaigns(fl, *task.campaign_args(), sgd(0.15),
+                           jnp.asarray([p] * 3, jnp.float64),
+                           seeds=jnp.asarray([1, 2, 3], jnp.uint32))
+    for i, r in enumerate(resps):
+        assert r.result["energy_wh"] == float(direct.energy_wh[i])
+        assert r.result["final_acc"] == float(direct.acc_history[i, -1])
+        assert r.result["mean_aoi"] == float(direct.mean_aoi[i])
+        assert r.result["participation_rate"] == \
+            float(direct.participation_rate[i])
+        assert r.result["rounds"] == int(direct.rounds[i])
+
+
+def test_explicit_duration_table_matches_analytic(svc):
+    """A dur.table equal to the analytic table serves identically."""
+    from repro.core.duration import theoretical_duration
+
+    tab = [float(x) for x in np.asarray(theoretical_duration(
+        3, d_inf=35.0, slope=8.0, horizon=500.0).table())]
+    base = {"schema": SCHEMA, "kind": "ne_solve",
+            "costs": [0.05, 0.1, 0.2], "gammas": 1.0}
+    r_analytic, = svc.serve([base])
+    r_table, = svc.serve([{**base, "dur": {"table": tab}}])
+    assert r_table.result == r_analytic.result
+
+
+# ---------------------------------------------------------------------------
+# compiled-program cache
+# ---------------------------------------------------------------------------
+
+def test_second_same_bucket_request_compiles_nothing(svc):
+    req = {"schema": SCHEMA, "kind": "ne_solve",
+           "costs": [0.2, 0.1, 0.3], "gammas": 0.8}
+    svc.serve([req])  # warm (or already warm from the parity tests)
+    before = svc.stats()
+    r2, = svc.serve([dict(req, gammas=1.7)])  # same bucket, new data
+    after = svc.stats()
+
+    assert r2.ok
+    assert after["cache"]["programs"] == before["cache"]["programs"]
+    assert after["cache"]["misses"] == before["cache"]["misses"]
+    assert after["cache"]["hits"] == before["cache"]["hits"] + 2  # solve+verify
+    # per-bucket compile stats are flat; only the call counters move
+    for label, stats in before["compile"].items():
+        assert after["compile"][label]["compile_s"] == stats["compile_s"]
+        assert after["compile"][label]["lower_s"] == stats["lower_s"]
+    assert after["compile"]["ne/solve/n3/b1"]["calls"] == \
+        before["compile"]["ne/solve/n3/b1"]["calls"] + 1
+
+
+def test_different_rung_compiles_new_program(svc):
+    ne = {"schema": SCHEMA, "kind": "ne_solve", "costs": [0.1, 0.2, 0.3]}
+    svc.serve([ne])  # b1 rung
+    before = svc.stats()["cache"]
+    svc.serve([ne, dict(ne, gammas=1.0)])  # 2 rows -> b2 rung
+    after = svc.stats()["cache"]
+    assert after["programs"] == before["programs"] + 2  # solve + verify @ b2
+    assert after["misses"] == before["misses"] + 2
+
+
+def test_oversize_group_chunks_and_reuses_program(svc):
+    """9 rows with max_batch=8 -> one b8 dispatch + one b1 dispatch."""
+    reqs = [{"schema": SCHEMA, "kind": "ne_solve",
+             "costs": [0.01 * (i + 1), 0.2], "gammas": 0.5}
+            for i in range(9)]
+    before = svc.stats()["dispatches"]
+    resps = svc.serve(reqs)
+    after = svc.stats()
+    assert len(resps) == 9 and all(r.ok for r in resps)
+    assert after["dispatches"] == before + 2
+    assert {r.bucket for r in resps} == {"ne/n2/b8", "ne/n2/b1"}
+    # chunk parity: row 8 (the b1 tail) matches a solo solve
+    solo, = svc.serve([reqs[8]])
+    assert solo.result == resps[8].result

@@ -166,6 +166,21 @@ def _rows_sharded(name: str, art: dict) -> list[tuple[str, str, str, str]]:
     ]
 
 
+def _rows_serve(name: str, art: dict) -> list[tuple[str, str, str, str]]:
+    d = art["data"]
+    lat = d["latency_us"]
+    return [(f"Sweep service, mixed closed-loop load ({d['requests']} "
+             f"requests: {d['by_kind'].get('ne_solve', 0)} NE / "
+             f"{d['by_kind'].get('calibrate', 0)} γ* / "
+             f"{d['by_kind'].get('campaign', 0)} campaign)",
+             "`repro.serve` padded/bucketed AOT program cache",
+             f"{d['throughput_rps']:.1f} req/s, p50 "
+             f"{lat['p50_us'] / 1e3:.0f} ms / p95 "
+             f"{lat['p95_us'] / 1e3:.0f} ms, cache hit "
+             f"{d['cache_hit_rate']:.0%}, padding {d['padding_overhead']:.1%}",
+             name)]
+
+
 _RENDERERS = {
     "campaign_sweep": _rows_campaign,
     "hetero_campaign": _rows_campaign,
@@ -173,6 +188,7 @@ _RENDERERS = {
     "kernel_gap": _rows_gap,
     "obs_smoke": _rows_smoke,
     "sharded_campaign": _rows_sharded,
+    "serve_load": _rows_serve,
 }
 
 
