@@ -1,0 +1,161 @@
+"""Coalition-formation sweep: certified partition equilibria at scale.
+
+The coalition engine (:mod:`repro.core.coalition`) runs hedonic
+best-switch dynamics over pooled FedAvg groups, with every coalition's
+internal profile at the certified heterogeneous NE, as one jitted
+vmap program. This sweep solves ``--scenarios`` (>= 200) random fleets,
+**certifies every returned partition** with ``verify_partition_batched``
+(no node gains more than 1e-6 by an in-coalition deviation or a coalition
+switch; inner tol 1e-10 keeps the corner residual far below the bar),
+benchmarks the equilibria against the coalition-structured planner
+(partition PoA) and the grand-coalition NE (formation gain), and
+spot-diffs the jitted dynamics against the eager Python oracle
+``partition_equilibrium_reference`` on small side games (the oracle costs
+tens of seconds per fleet, so it cannot follow the full sweep).
+
+Emits ``name,us_per_call,derived`` CSV rows and ``BENCH_coalition.json``
+(repro.obs/v1) with timing stats, certification evidence, and the
+PoA/formation-gain distributions.
+
+Run:  PYTHONPATH=src:. python benchmarks/coalition_sweep.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core  # noqa: F401  (enables x64)
+from repro.core.coalition import (partition_equilibrium_reference,
+                                  solve_partition)
+from repro.core.duration import theoretical_duration
+from repro.mechanisms import coalition_report
+from repro.obs.export import write_artifact
+from benchmarks.common import header, record, time_fn
+
+N_NODES = 12
+N_COALITIONS = 3
+CAP = 6                  # >= ceil(N/M): every fleet has a feasible partition
+TOL = 1e-10              # corner residual tol/damping x boundary slope << 1e-6
+MAX_ITERS = 600          # geometric tail to 1e-10 outruns the default 200
+CERT_TOL = 1e-6
+
+
+def build_scenarios(batch: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    costs = jnp.asarray(rng.uniform(0.5, 10.0, (batch, N_NODES)))
+    gammas = jnp.asarray(rng.uniform(0.2, 1.0, (batch, N_NODES)))
+    return costs, gammas, theoretical_duration(n_nodes=N_NODES)
+
+
+def spot_check_oracle(seed: int = 3) -> float:
+    """Diff the jitted dynamics against the eager oracle on tiny fleets."""
+    rng = np.random.default_rng(seed)
+    worst = 0.0
+    for n in (3, 4):
+        dur = theoretical_duration(n_nodes=n, d_inf=30.0, slope=6.0)
+        costs = jnp.asarray(rng.uniform(0.5, 8.0, (n,)))
+        gammas = jnp.asarray(rng.uniform(0.2, 1.0, (n,)))
+        sol = solve_partition(costs, gammas, dur, n_coalitions=2)
+        assign_ref, p_ref, conv_ref, _ = partition_equilibrium_reference(
+            costs, gammas, dur, n_coalitions=2)
+        assert bool(sol.converged[0]) == conv_ref, f"n={n}: convergence skew"
+        if not conv_ref:
+            continue
+        assert np.array_equal(np.asarray(sol.assign[0]),
+                              np.asarray(assign_ref)), f"n={n}: partitions"
+        worst = max(worst, float(np.max(np.abs(
+            np.asarray(sol.p[0]) - np.asarray(p_ref)))))
+        assert worst <= 1e-5, f"n={n}: profile drift {worst}"
+    return worst
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=208,
+                    help="fleets in the sweep (acceptance bar: >= 200)")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timed solver repetitions for the stats block")
+    ap.add_argument("--json", default="BENCH_coalition.json")
+    args = ap.parse_args(argv)
+
+    costs, gammas, dur = build_scenarios(args.scenarios)
+    header()
+
+    # -- oracle spot checks (tiny fleets; the eager oracle can't follow) -----
+    t0 = time.perf_counter()
+    drift = spot_check_oracle()
+    record("coalition_sweep.oracle_spot", (time.perf_counter() - t0) * 1e6,
+           f"jitted dynamics == Python oracle; worst |dp| {drift:.2e}")
+
+    # -- timed partition solves ----------------------------------------------
+    stats = time_fn(
+        lambda: solve_partition(costs, gammas, dur,
+                                n_coalitions=N_COALITIONS, cap=CAP,
+                                tol=TOL, max_iters=MAX_ITERS).p,
+        iters=args.iters)
+    record("coalition_sweep.solve_total", stats["p50_us"],
+           f"{args.scenarios} fleets N={N_NODES} M={N_COALITIONS} cap={CAP}")
+
+    # -- solve + certify + planner + grand-coalition benchmark ---------------
+    t0 = time.perf_counter()
+    rep = coalition_report(costs, gammas, dur, n_coalitions=N_COALITIONS,
+                           cap=CAP, cert_tol=CERT_TOL, tol=TOL,
+                           max_iters=MAX_ITERS)
+    jax.block_until_ready(rep.partition.poa)
+    t_report = time.perf_counter() - t0
+    sol = rep.partition.solution
+
+    n_conv = int(jnp.sum(sol.converged & sol.inner_converged))
+    n_cert = int(jnp.sum(rep.certified))
+    max_dev = float(jnp.max(rep.partition.deviation))
+    record("coalition_sweep.report_total", t_report * 1e6,
+           f"{n_conv} converged; {n_cert} certified; "
+           f"max deviation {max_dev:.2e} (bar <= {CERT_TOL:g})")
+    assert n_conv == args.scenarios, \
+        f"unconverged partition dynamics: {args.scenarios - n_conv}"
+    assert n_cert == args.scenarios, \
+        f"uncertified partitions in the sweep: max deviation {max_dev}"
+
+    poa = np.asarray(rep.partition.poa)
+    gain = np.asarray(rep.formation_gain)
+    sizes = np.asarray(sol.sizes)
+    record("coalition_sweep.poa", float("nan"),
+           f"partition PoA in [{poa.min():.3f}, {poa.max():.3f}]")
+    record("coalition_sweep.formation_gain", float("nan"),
+           f"grand-NE cost minus partition-NE cost in "
+           f"[{gain.min():.3f}, {gain.max():.3f}]; "
+           f"{int((gain > 0).sum())}/{args.scenarios} fleets prefer splitting")
+
+    write_artifact(args.json, "coalition_sweep", {
+        "scenarios": args.scenarios,
+        "n_nodes": N_NODES,
+        "n_coalitions": N_COALITIONS,
+        "cap": CAP,
+        "inner_tol": TOL,
+        "max_iters": MAX_ITERS,
+        "cert_tol": CERT_TOL,
+        "converged": n_conv,
+        "certified": n_cert,
+        "max_deviation": max_dev,
+        "oracle_spot_drift": drift,
+        "solve_timing": stats,
+        "report_s": round(t_report, 2),
+        "switches": np.asarray(sol.switches).tolist(),
+        "coalition_sizes": sizes.tolist(),
+        "poa": np.round(poa, 6).tolist(),
+        "ne_cost": np.round(np.asarray(rep.partition.ne_cost), 6).tolist(),
+        "opt_cost": np.round(np.asarray(rep.partition.opt_cost), 6).tolist(),
+        "grand_cost": np.round(np.asarray(rep.grand_cost), 6).tolist(),
+        "formation_gain": np.round(gain, 6).tolist(),
+    }, seed=0, backend="ref")
+    print(f"\npartition sweep: {args.scenarios} fleets, all certified "
+          f"(max deviation {max_dev:.2e}), PoA up to {poa.max():.3f}, "
+          f"{int((gain > 0).sum())} fleets gain by splitting -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -80,6 +80,12 @@ def _mechanisms() -> None:
     mechanisms_sweep.main([])
 
 
+@_suite("coalition", ("BENCH_coalition.json",))
+def _coalition() -> None:
+    from benchmarks import coalition_sweep
+    coalition_sweep.main([])
+
+
 @_suite("campaign", ("BENCH_campaign.json",))
 def _campaign() -> None:
     from benchmarks import campaign_sweep

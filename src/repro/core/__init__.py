@@ -24,8 +24,17 @@ from repro.core.duration import (  # noqa: E402,F401
     theoretical_duration,
 )
 from repro.core.aoi import expected_aoi  # noqa: E402,F401
-from repro.core.comm80211ax import CommParams, airtime_model  # noqa: E402,F401
-from repro.core.energy import EnergyParams, EnergyLedger, task_energy  # noqa: E402,F401
+from repro.core.comm80211ax import (  # noqa: E402,F401
+    CommParams,
+    airtime_model,
+    airtime_model_batched,
+)
+from repro.core.energy import (  # noqa: E402,F401
+    EnergyParams,
+    EnergyLedger,
+    channel_energy_rates,
+    task_energy,
+)
 from repro.core.utility import UtilityParams, player_utility, social_utility  # noqa: E402,F401
 from repro.core.game import (  # noqa: E402,F401
     GameSolution,
@@ -50,5 +59,15 @@ from repro.core.asymmetric_batched import (  # noqa: E402,F401
     social_cost_batched,
     solve_heterogeneous,
     verify_equilibrium_batched,
+)
+from repro.core.coalition import (  # noqa: E402,F401
+    PartitionPoA,
+    PartitionSolution,
+    partition_equilibrium_reference,
+    partition_planner_batched,
+    partition_poa_report,
+    partition_social_cost_batched,
+    solve_partition,
+    verify_partition_batched,
 )
 from repro.core.online import OnlineDurationEstimator  # noqa: E402,F401

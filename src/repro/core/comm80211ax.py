@@ -6,15 +6,30 @@ data sources", IEEE OJ-COMS 2023): a single-user HE transmission with
 RTS/CTS protection and a fixed contention window. ``T_tx`` is the airtime to
 upload the ``S_w``-byte model update; ``E_tx = P_tx * T_tx`` (paper eq. 2).
 
-All quantities are scalars; the model is closed-form and jit-free by design
-(it parameterizes the game, it is not inside the training step).
+Two evaluators share the model:
+
+* :func:`airtime_model` — the seed scalar closed form (pure Python
+  ``math``), kept **verbatim** as the test oracle. It parameterizes the
+  symmetric game and is jit-free by design.
+* :func:`airtime_model_batched` — the jit-compatible vectorized form for
+  *channel-heterogeneous fleets*: per-node MCS (``bits_per_symbol_per_sc``)
+  and/or payload arrays broadcast to per-node airtime/energy vectors that
+  feed :func:`repro.core.energy.channel_energy_rates` and, through the
+  ``energy_rates_j`` seam, the scan-fused campaign engine. Pinned
+  elementwise (≤ 1e-12 relative) against the scalar oracle across an
+  MCS × payload grid — including the ``payload_bytes = 0`` and
+  sub-A-MPDU remainder corners — in ``tests/test_energy_comm.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 
-__all__ = ["CommParams", "airtime_model", "PAPER_COMM"]
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CommParams", "airtime_model", "airtime_model_batched",
+           "PAPER_COMM"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +118,85 @@ def airtime_model(
         "t_overhead_s": t_overhead_us * 1e-6,
         "n_ampdu": n_ampdu,
         "goodput_mbps": (bits_total / t_total_us) if t_total_us else 0.0,
+        "tx_power_w": tx_power_w,
+        "e_tx_wh": tx_power_w * t_total_s / 3600.0,
+    }
+
+
+def airtime_model_batched(
+    payload_bytes: jax.Array,
+    bits_per_symbol_per_sc: jax.Array | None = None,
+    params: CommParams = PAPER_COMM,
+) -> dict:
+    """Vectorized :func:`airtime_model`: per-node MCS/payload → airtimes.
+
+    The jit/vmap-compatible form of the scalar oracle above — the per-node
+    channel knob is ``bits_per_symbol_per_sc`` (the MCS: 1024-QAM 5/6 ≈
+    8.33 bits at the top, low-order modulations below), broadcast against
+    ``payload_bytes``. All outputs are float64 arrays of the broadcast
+    shape (``tx_power_w`` stays a Python scalar: the paper's P_tx is
+    common to the fleet).
+
+    Guards the two traps of vectorizing the closed form: the
+    ``goodput_mbps`` division uses a ``where``-safe denominator (both
+    branches of a ``jnp.where`` evaluate under jit, and
+    ``payload_bytes = 0`` would otherwise divide 0/0 when a pathological
+    parameterization zeroes the airtime), and the float ``divmod``
+    A-MPDU fragmentation is re-expressed as ``floor_divide``/``remainder``
+    with the zero-remainder data frame masked out (``data_airtime(0)``
+    would still charge a MAC-header symbol).
+
+    Pinned ≤ 1e-12 relative against the scalar oracle elementwise in
+    ``tests/test_energy_comm.py``.
+    """
+    p = params
+    payload = jnp.asarray(payload_bytes, jnp.float64)
+    bps = jnp.asarray(
+        p.bits_per_symbol_per_sc if bits_per_symbol_per_sc is None
+        else bits_per_symbol_per_sc, jnp.float64)
+    payload, bps = jnp.broadcast_arrays(payload, bps)
+
+    bits_total = payload * 8.0
+    data_bits_per_symbol = p.n_subcarriers * p.n_spatial_streams * bps
+
+    mpdu_bits = float(p.a_mpdu_max_bits)
+    n_ampdu = jnp.maximum(1.0, jnp.ceil(bits_total / mpdu_bits))
+
+    # control frames ride at the legacy rate — no per-node dependence, so
+    # the overhead constant is the scalar oracle's float, exactly
+    t_rts = _control_frame_us(p, p.l_rts_bits)
+    t_cts = _control_frame_us(p, p.l_cts_bits)
+    t_ack = _control_frame_us(p, p.l_ack_bits)
+    mean_backoff_us = (p.contention_window / 2.0) * p.t_empty_slot_us
+    per_txop_overhead_us = (
+        p.t_difs_us + mean_backoff_us
+        + t_rts + p.t_sifs_us + t_cts + p.t_sifs_us
+        + p.t_phy_preamble_us + p.t_he_su_us
+        + p.t_sifs_us + t_ack)
+
+    def data_airtime_us(bits):
+        n_sym = jnp.ceil(
+            (bits + p.l_mac_header_bits + p.l_service_bits)
+            / data_bits_per_symbol)
+        return n_sym * p.sigma_he_us
+
+    full = jnp.floor_divide(bits_total, mpdu_bits)
+    rem = jnp.remainder(bits_total, mpdu_bits)
+    t_data_us = (full * data_airtime_us(jnp.asarray(mpdu_bits))
+                 + jnp.where(rem > 0.0, data_airtime_us(rem), 0.0))
+    t_overhead_us = n_ampdu * per_txop_overhead_us
+    t_total_us = t_data_us + t_overhead_us
+
+    tx_power_w = 10.0 ** (p.tx_power_dbm / 10.0) * 1e-3
+    t_total_s = t_total_us * 1e-6
+    safe_t = jnp.where(t_total_us > 0.0, t_total_us, 1.0)
+    return {
+        "t_tx_s": t_total_s,
+        "t_data_s": t_data_us * 1e-6,
+        "t_overhead_s": t_overhead_us * 1e-6,
+        "n_ampdu": n_ampdu,
+        "goodput_mbps": jnp.where(t_total_us > 0.0, bits_total / safe_t,
+                                  0.0),
         "tx_power_w": tx_power_w,
         "e_tx_wh": tx_power_w * t_total_s / 3600.0,
     }

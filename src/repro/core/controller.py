@@ -89,14 +89,22 @@ class ParticipationController:
                         supplied, the AoI reward weight γ* is calibrated on
                         the fly so even the worst induced NE is within
                         ``target_poa`` of the centralized optimum.
+        "coalition"   — partition equilibrium of the coalition-formation
+                        game (:mod:`repro.core.coalition`): nodes sort
+                        themselves into ``n_coalitions`` pooled FedAvg
+                        groups (≤ ``coalition_cap`` members each), each
+                        coalition playing its internal heterogeneous NE.
+                        Per-node profiles only — use :meth:`solve_batched`.
     """
 
     n_nodes: int
     gamma: float = 0.0
     cost: float = 0.0
     mode: Literal["ne", "ne_worst", "centralized", "fixed",
-                  "mechanism"] = "ne"
+                  "mechanism", "coalition"] = "ne"
     fixed_p: float = 0.5
+    n_coalitions: int = 1
+    coalition_cap: Optional[int] = None
     duration_model: Optional[DurationModel] = None
     energy_params: EnergyParams = dataclasses.field(default_factory=EnergyParams)
     mechanism: Optional["Mechanism"] = None
@@ -112,6 +120,8 @@ class ParticipationController:
             raise ValueError(
                 f"duration model is for N={self.duration_model.n_nodes}, "
                 f"controller has N={self.n_nodes}")
+        if self.n_coalitions < 1:
+            raise ValueError(f"n_coalitions={self.n_coalitions} must be >= 1")
 
     # -- game ---------------------------------------------------------------
     @property
@@ -195,10 +205,26 @@ class ParticipationController:
         # Lazy import — repro.mechanisms imports repro.core at load time.
         from repro.mechanisms.batched import solve_batched
 
-        if ((gammas is not None and jnp.asarray(gammas).ndim == 2)
+        eff_mode = mode or self.mode
+        if (eff_mode == "coalition"
+                or (gammas is not None and jnp.asarray(gammas).ndim == 2)
                 or (costs is not None and jnp.asarray(costs).ndim == 2)):
             if coarse is not None:
                 solver_kwargs["coarse"] = coarse
+            if eff_mode == "coalition":
+                # Partitions are inherently per-node: spread scalar /
+                # per-scenario (B,) configs uniformly across the fleet so
+                # the coalition engine sees its (B, N) matrices.
+                def _as_matrix(x, default):
+                    arr = jnp.atleast_1d(jnp.asarray(
+                        default if x is None else x, jnp.float64))
+                    if arr.ndim == 1:
+                        arr = arr[:, None]
+                    return jnp.broadcast_to(
+                        arr, (arr.shape[0], self.n_nodes))
+
+                gammas = _as_matrix(gammas, self.gamma)
+                costs = _as_matrix(costs, self.cost)
             return self.solve_batched_heterogeneous(
                 gammas, costs, mode, gamma_max=gamma_max, **solver_kwargs)
         if solver_kwargs:
@@ -285,6 +311,11 @@ class ParticipationController:
           counterpart of
           :func:`repro.mechanisms.heterogeneous.calibrate_gamma_heterogeneous`,
           which refines by bisection); returns that induced NE profile.
+        * ``"coalition"`` — the certified partition equilibrium of the
+          coalition-formation game (:func:`repro.core.coalition.solve_partition`
+          with this controller's ``n_coalitions`` / ``coalition_cap``):
+          each node's probability is its NE strategy *inside the coalition
+          it settled in* after best-switch dynamics converge.
         * ``"fixed"`` — ``fixed_p`` everywhere.
 
         Args:
@@ -324,6 +355,17 @@ class ParticipationController:
 
         if mode == "fixed":
             return jnp.full((b, n), self.fixed_p, jnp.float64)
+
+        if mode == "coalition":
+            if mesh is not None:
+                raise ValueError(
+                    "coalition mode does not support mesh sharding")
+            from repro.core.coalition import solve_partition
+
+            sol = solve_partition(c, g, dur,
+                                  n_coalitions=self.n_coalitions,
+                                  cap=self.coalition_cap, **solver_kwargs)
+            return sol.p
 
         if mode == "mechanism":
             grid = jnp.linspace(0.0, gamma_max, coarse)
@@ -380,6 +422,11 @@ class ParticipationController:
         :meth:`solve_batched_heterogeneous` instead — this scalar surface
         covers the paper's identical-node scenarios.
         """
+        if self.mode == "coalition":
+            raise ValueError(
+                "coalition mode yields per-node partition profiles, not a "
+                "scalar probability; use solve_batched() (or "
+                "repro.core.coalition.solve_partition directly)")
         if self.mode == "fixed":
             return float(self.fixed_p)
         if self.mode == "mechanism":
@@ -424,7 +471,8 @@ class ParticipationController:
         sol = self.solve()
         out = {
             "mode": self.mode,
-            "p": self.participation_probability(),
+            "p": (None if self.mode == "coalition"
+                  else self.participation_probability()),
             "equilibria": sol.equilibria,
             "ne_costs": sol.ne_costs,
             "opt_p": sol.opt_p,

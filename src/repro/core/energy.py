@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm80211ax import CommParams, PAPER_COMM, airtime_model
+from repro.core.comm80211ax import (
+    CommParams, PAPER_COMM, airtime_model, airtime_model_batched)
 from repro.core.duration import PAPER_N_CLIENTS, PAPER_TABLE_II
 
 __all__ = [
@@ -37,6 +38,7 @@ __all__ = [
     "expected_task_energy",
     "calibrate_from_table",
     "per_node_energy_rates",
+    "channel_energy_rates",
     "PAPER_MODEL_BYTES",
 ]
 
@@ -141,6 +143,53 @@ def per_node_energy_rates(
         params = [params] * n_nodes
     e_part = jnp.asarray([e.e_participant_j for e in params], jnp.float64)
     e_idle = jnp.asarray([e.e_idle_j for e in params], jnp.float64)
+    return e_part, e_idle
+
+
+def channel_energy_rates(
+    bits_per_symbol_per_sc: jax.Array,
+    params: EnergyParams = EnergyParams(),
+    payload_bytes: "jax.Array | float | None" = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Channel-aware per-node joule rates from a per-node MCS vector.
+
+    The channel-heterogeneous counterpart of :func:`per_node_energy_rates`:
+    instead of node-indexed :class:`EnergyParams` instances, the fleet
+    shares one power model and differs in *link quality* — per-node
+    ``bits_per_symbol_per_sc`` (and optionally per-node update sizes).
+    ``E_tx`` is evaluated per node with :func:`airtime_model_batched`
+    and substituted into eq. (4):
+
+        e_part[i] = P_hw*T_train + E_tx(MCS_i, S_i) + P_idle*(T_round - T_train)
+        e_idle[i] = P_idle*T_round
+
+    jit/vmap-compatible, so a campaign batch can sweep channel maps.
+
+    Args:
+        bits_per_symbol_per_sc: ``(N,)`` per-node MCS knob.
+        params: shared power/time constants (``params.comm`` supplies every
+            non-MCS channel parameter).
+        payload_bytes: per-node or scalar update size; defaults to
+            ``params.model_bytes``.
+
+    Returns:
+        ``(e_participant_j, e_idle_j)`` — ``(N,)`` float64 vectors feeding
+        the campaign engine's ``energy_rates_j`` seam. At a uniform MCS
+        equal to ``params.comm.bits_per_symbol_per_sc`` they reproduce the
+        scalar ``params.e_participant_j`` / ``params.e_idle_j`` exactly
+        (the uniform-channel bitwise pin in ``tests/test_hetero_campaign.py``).
+    """
+    bps = jnp.asarray(bits_per_symbol_per_sc, jnp.float64)
+    if payload_bytes is None:
+        payload_bytes = params.model_bytes
+    a = airtime_model_batched(payload_bytes, bps, params.comm)
+    e_tx_j = a["tx_power_w"] * a["t_tx_s"]
+    e_part = (params.p_hw_w * params.t_train_s
+              + e_tx_j
+              + params.p_idle_w * (params.t_round_s - params.t_train_s))
+    e_idle = jnp.broadcast_to(
+        jnp.asarray(params.p_idle_w * params.t_round_s, jnp.float64),
+        e_part.shape)
     return e_part, e_idle
 
 

@@ -74,12 +74,14 @@ from repro.obs import ObsConfig
 from repro.obs.metrics import MetricStream, merge_norm
 from repro.optim.base import Optimizer
 
-__all__ = ["CampaignResult", "ChurnConfig", "build_campaign", "run_campaigns"]
+__all__ = ["CampaignResult", "ChurnConfig", "DeadlineConfig",
+           "build_campaign", "run_campaigns"]
 
 # RNG stream offsets shared with the reference simulators — masks (and hence
 # ledgers/AoI) are bitwise-comparable between engine and oracle.
-MASK_STREAM = 10_000    # participation Bernoulli draws, one fold per round
-CHURN_STREAM = 20_000   # arrival/departure draws, one fold per round
+MASK_STREAM = 10_000      # participation Bernoulli draws, one fold per round
+CHURN_STREAM = 20_000     # arrival/departure draws, one fold per round
+DEADLINE_STREAM = 30_000  # straggler/deadline-miss draws, one fold per round
 
 
 def _tree_select(cond: jax.Array, on_true, on_false):
@@ -126,6 +128,33 @@ class ChurnConfig:
         return arr, dep, pres
 
 
+@dataclasses.dataclass(frozen=True)
+class DeadlineConfig:
+    """Per-round straggler model: a node wins the participation lottery but
+    misses the round deadline with probability ``miss``.
+
+    A straggler *attempts* the round — it trains and transmits, so the
+    ledger charges it the full participant energy (eq. 4) — but its update
+    arrives after the aggregation deadline and is dropped from the FedAvg
+    merge; its AoI is not reset (no fresh information reached the server).
+    Draws come from their own RNG stream (``DEADLINE_STREAM``), so with
+    ``miss = 0`` the delivered masks — and the whole program under the
+    static no-deadline flag — stay bitwise-identical to the deadline-free
+    engine (pinned in ``tests/test_hetero_campaign.py``).
+
+    Attributes:
+        miss: per-round deadline-miss probability — scalar, ``(N,)``,
+            ``(B, 1)``, or ``(B, N)`` (broadcast to ``(B, N)``).
+    """
+
+    miss: Any = 0.0
+
+    def as_arrays(self, batch: int, n: int) -> jax.Array:
+        """Broadcast to the engine's ``(B, N)`` miss-probability input."""
+        return jnp.broadcast_to(
+            jnp.atleast_2d(jnp.asarray(self.miss, jnp.float64)), (batch, n))
+
+
 @dataclasses.dataclass
 class CampaignResult:
     """Batched outcome of B scan-fused campaigns (leading axis B).
@@ -151,6 +180,7 @@ class CampaignResult:
     aoi: AoITracker              # batched
     present_counts: jax.Array    # (B, N) rounds each node was in the fleet
     present_final: jax.Array     # (B, N) bool presence after the last round
+    straggler_counts: jax.Array  # (B, N) attempts that missed the deadline
     metrics: MetricStream | None = None  # batched, when obs recorded one
     #: final merged model params, batched (leaves carry leading B axis) —
     #: slice scenario i via ``jax.tree.map(lambda x: x[i], result.params)``
@@ -187,6 +217,7 @@ def build_campaign(
     opt: Optimizer,
     *,
     churn: bool = False,
+    deadline: bool = False,
     backend: str | None = None,
     obs: ObsConfig | None = None,
     mesh=None,
@@ -211,14 +242,22 @@ def build_campaign(
     ``obs.sink`` via ``jax.debug.callback``. Instrumentation never touches
     an RNG stream or a computed value — it only adds outputs.
 
-    Returns a jitted engine:
+    ``deadline`` is a third static flag: it adds the straggler model
+    (attempted-but-late updates dropped from the merge, full participant
+    energy still charged, straggler counts in the carry) and a ``miss
+    (B, N)`` probability input. ``deadline=False`` builds the program
+    without any deadline logic — bitwise-identical to the PR-4 engine.
 
-    * ``churn=False`` — ``fn(p, seeds, e_participant_j, e_idle_j)``;
-    * ``churn=True``  — ``fn(p, seeds, e_participant_j, e_idle_j,
-      arrival, departure, present0)``;
-    * with ``obs.events`` enabled, a trailing ``scenario_ids (B,)`` arg is
-      appended (event records need a stable per-scenario identity under
-      ``vmap``).
+    Returns a jitted engine whose positional signature grows with the
+    static flags, in this fixed order:
+
+    ``fn(p, seeds, e_participant_j, e_idle_j,
+    [miss,] [arrival, departure, present0,] [scenario_ids])``
+
+    * ``miss (B, N)`` iff ``deadline=True``;
+    * the churn triple iff ``churn=True``;
+    * ``scenario_ids (B,)`` iff ``obs.events`` is enabled (event records
+      need a stable per-scenario identity under ``vmap``).
 
     ``p`` is ``(B, N)``; ``seeds`` ``(B,)``; the joule rates are per-round
     energies, ``(B,)`` scalar-per-scenario or ``(B, N)`` per-node; the churn
@@ -268,11 +307,11 @@ def build_campaign(
                 params, batches)
         return mask, client_params
 
-    # One body for both engines: ``churn``/``obs`` are static Python, so
-    # the branches below resolve at trace time — the churn-free,
-    # obs-free program is instruction-identical to the symmetric engine's.
+    # One body for every engine: ``churn``/``deadline``/``obs`` are static
+    # Python, so the branches below resolve at trace time — the flag-free
+    # program is instruction-identical to the symmetric engine's.
     def one_campaign(p_vec, seed, e_participant_j, e_idle_j,
-                     arrival=None, departure=None, present0=None,
+                     miss=None, arrival=None, departure=None, present0=None,
                      scenario_id=None):
         key = jax.random.PRNGKey(seed)
         state0 = (
@@ -282,6 +321,8 @@ def build_campaign(
             AoITracker.create(n),
             jnp.zeros((), jnp.float64),          # last recorded accuracy
         )
+        if deadline:
+            state0 += (jnp.zeros((n,), jnp.int64),)  # straggler counts
         if churn:
             state0 += (
                 jnp.asarray(present0, bool),     # fleet presence
@@ -293,8 +334,12 @@ def build_campaign(
         def round_step(carry, r):
             params, ledger, tracker, aoi, last_acc, *rest = carry
             active = ~tracker.converged
+            pos = 0
+            if deadline:
+                scount = rest[pos]
+                pos += 1
             if churn:
-                present, pcount = rest[0], rest[1]
+                present, pcount = rest[pos], rest[pos + 1]
                 # Churn draws come from their own stream (CHURN_STREAM), so
                 # the participation stream — and with zero churn the masks
                 # themselves — stay bitwise-identical to the churn-free
@@ -314,14 +359,28 @@ def build_campaign(
             mask, client_params = train_round(params, p_vec, rng, r)
             if churn:
                 mask = mask & here               # absentees cannot join
+            if deadline:
+                # Late draws have their own stream (DEADLINE_STREAM), so the
+                # participation stream — and with miss=0 the delivered masks
+                # themselves — stay bitwise-identical to the deadline-free
+                # engine.
+                with jax.named_scope("campaign/deadline"):
+                    kl = jax.random.fold_in(key, DEADLINE_STREAM + r)
+                    late = jax.random.bernoulli(kl, miss, (n,))
+                delivered = mask & ~late
+            else:
+                delivered = mask
             with jax.named_scope("campaign/merge"):
-                merged = fedavg_merge(params, client_params, mask,
+                merged = fedavg_merge(params, client_params, delivered,
                                       backend=backend)
             with jax.named_scope("campaign/validate"):
                 acc = eval_fn(merged, val_batch)
 
             new_acc = jnp.where(active, acc, last_acc)
             with jax.named_scope("campaign/accounting"):
+                # The ledger charges *attempts*: a straggler trained and
+                # transmitted (full eq.-4 energy) even though its update
+                # missed the merge. AoI resets only on *delivered* updates.
                 new_ledger = ledger.record_round_j(mask, e_participant_j,
                                                    e_idle_j)
                 new_carry = (
@@ -329,16 +388,22 @@ def build_campaign(
                     _tree_select(active, new_ledger, ledger),
                     tracker.masked_update(acc, jnp.asarray(r, jnp.int32),
                                           active),
-                    _tree_select(active, aoi.update(mask, here), aoi),
+                    _tree_select(active, aoi.update(delivered, here), aoi),
                     new_acc,
                 )
+                if deadline:
+                    new_carry += (
+                        scount + jnp.where(
+                            active, jnp.asarray(mask & late, jnp.int64), 0),
+                    )
                 if churn:
                     new_carry += (
                         jnp.where(active, here, present),
                         pcount + jnp.where(active,
                                            jnp.asarray(here, jnp.int64), 0),
                     )
-            k = jnp.where(active, jnp.sum(jnp.asarray(mask, jnp.int32)), 0)
+            k = jnp.where(active,
+                          jnp.sum(jnp.asarray(delivered, jnp.int32)), 0)
             if record_metrics:
                 with jax.named_scope("campaign/obs_metrics"):
                     stream = rest[-1]
@@ -362,8 +427,12 @@ def build_campaign(
                                          jnp.arange(fl.max_rounds))
         out = {"params": final[0], "ledger": final[1], "tracker": final[2],
                "aoi": final[3], "accs": accs, "ks": ks}
+        pos = 5
+        if deadline:
+            out["straggler_counts"] = final[pos]
+            pos += 1
         if churn:
-            out.update(present=final[5], present_counts=final[6])
+            out.update(present=final[pos], present_counts=final[pos + 1])
         if record_metrics:
             out["metrics"] = final[-1]
         if emit_events:
@@ -384,18 +453,21 @@ def build_campaign(
         return jax.jit(vfn, in_shardings=batch_sharding,
                        out_shardings=batch_sharding)
 
-    if churn and emit_events:
-        return _jit(jax.vmap(one_campaign))
+    # The engine's positional signature grows with the static flags; build
+    # it once from the flag set (order: miss, churn triple, scenario_ids)
+    # instead of enumerating every flag combination.
+    extra: list[str] = []
+    if deadline:
+        extra.append("miss")
     if churn:
-        return _jit(jax.vmap(
-            lambda p, s, ep, ei, ar, de, pr: one_campaign(
-                p, s, ep, ei, ar, de, pr)))
+        extra.extend(("arrival", "departure", "present0"))
     if emit_events:
-        return _jit(jax.vmap(
-            lambda p, s, ep, ei, sid: one_campaign(
-                p, s, ep, ei, scenario_id=sid)))
-    return _jit(jax.vmap(
-        lambda p, s, ep, ei: one_campaign(p, s, ep, ei)))
+        extra.append("scenario_id")
+
+    def _engine(p, s, ep, ei, *rest):
+        return one_campaign(p, s, ep, ei, **dict(zip(extra, rest)))
+
+    return _jit(jax.vmap(_engine))
 
 
 def _energy_rates(energy, batch: int) -> tuple[jax.Array, jax.Array]:
@@ -454,6 +526,7 @@ def run_campaigns(
     energy: EnergyParams | Sequence[EnergyParams] | None = None,
     energy_rates_j: tuple[jax.Array, jax.Array] | None = None,
     churn: ChurnConfig | None = None,
+    deadline: DeadlineConfig | None = None,
     seeds: Sequence[int] | jax.Array | None = None,
     engine: Callable | None = None,
     backend: str | None = None,
@@ -479,6 +552,13 @@ def run_campaigns(
             (presence mask folded into the scan carry). ``None`` builds the
             churn-free program — instruction-identical to the symmetric
             engine.
+        deadline: optional :class:`DeadlineConfig` enabling the straggler
+            model: nodes that win the participation lottery miss the round
+            deadline with probability ``miss`` — they burn the full
+            participant energy but are dropped from the merge and their
+            AoI is not reset. ``None`` builds the deadline-free program
+            (bitwise-identical to the engine without the flag); per-node
+            miss counts land in ``CampaignResult.straggler_counts``.
         seeds: per-scenario PRNG seeds (default: ``fl.seed`` for all — the
             scenarios then share model init and data streams, isolating the
             effect of ``p``).
@@ -486,8 +566,9 @@ def run_campaigns(
             sweeping repeatedly over one task so the XLA compile is paid
             once (a fresh engine is built — and traced — per call
             otherwise). Must have been built with ``churn=True`` iff
-            ``churn`` is passed here; a prebuilt engine also bakes in its
-            own ``backend``, ignoring this call's.
+            ``churn`` is passed here (likewise ``deadline``); a prebuilt
+            engine also bakes in its own ``backend``, ignoring this
+            call's.
         backend: FedAvg-merge implementation, ``"ref"`` (default —
             bitwise-stable jnp path) or ``"pallas"`` (fused kernel); see
             :func:`build_campaign`.
@@ -539,9 +620,11 @@ def run_campaigns(
 
     fn = engine if engine is not None else build_campaign(
         fl, init_params, loss_fn, eval_fn, client_data, val_batch, opt,
-        churn=churn is not None, backend=backend, obs=obs,
-        mesh=mesh, batch_axis=batch_axis)
+        churn=churn is not None, deadline=deadline is not None,
+        backend=backend, obs=obs, mesh=mesh, batch_axis=batch_axis)
     call_args = [p_arr, seeds, e_part, e_idle]
+    if deadline is not None:
+        call_args.append(deadline.as_arrays(batch, n))
     if churn is not None:
         call_args.extend(churn.as_arrays(batch, n))
     if obs is not None and obs.emit_events:
@@ -594,6 +677,8 @@ def run_campaigns(
         aoi=aoi,
         present_counts=present_counts,
         present_final=present_final,
+        straggler_counts=out.get(
+            "straggler_counts", jnp.zeros((batch, n), jnp.int64)),
         metrics=out.get("metrics"),
         params=out["params"],
     )

@@ -208,6 +208,8 @@ class HeterogeneousReference:
         aoi: the eager :class:`~repro.core.aoi.AoITracker`.
         present_counts: ``(N,)`` rounds each node was in the fleet.
         present_final: ``(N,)`` bool presence after the last round.
+        straggler_counts: ``(N,)`` rounds each node attempted but missed
+            the deadline (all zeros without a ``deadline`` config).
         wall_s: wall-clock seconds of the Python round loop.
     """
 
@@ -218,6 +220,7 @@ class HeterogeneousReference:
     aoi: AoITracker
     present_counts: jax.Array
     present_final: jax.Array
+    straggler_counts: jax.Array
     wall_s: float
 
 
@@ -234,6 +237,7 @@ def run_heterogeneous_reference(
     energy_rates_j: tuple | None = None,
     energy: EnergyParams | None = None,
     churn=None,
+    deadline=None,
 ) -> HeterogeneousReference:
     """Per-node Python round loop — the heterogeneous engine's test oracle.
 
@@ -242,9 +246,10 @@ def run_heterogeneous_reference(
     eager presence bookkeeping, early ``break`` on convergence. The
     scan-fused engine (:func:`repro.federated.campaign.run_campaigns`)
     draws every random variable from the *same* RNG streams
-    (``MASK_STREAM`` / ``CHURN_STREAM`` folds of ``PRNGKey(fl.seed)``), so
-    the two produce bitwise-identical masks, per-node ledgers, and AoI
-    trackers — pinned in ``tests/test_hetero_campaign.py``.
+    (``MASK_STREAM`` / ``CHURN_STREAM`` / ``DEADLINE_STREAM`` folds of
+    ``PRNGKey(fl.seed)``), so the two produce bitwise-identical masks,
+    per-node ledgers, and AoI trackers — pinned in
+    ``tests/test_hetero_campaign.py``.
 
     Args:
         p: scalar or ``(N,)`` per-node participation probabilities (dtype
@@ -255,8 +260,13 @@ def run_heterogeneous_reference(
         energy: shared :class:`EnergyParams` (default paper Table I).
         churn: optional :class:`~repro.federated.campaign.ChurnConfig`
             (single scenario: fields broadcastable to ``(N,)``).
+        deadline: optional
+            :class:`~repro.federated.campaign.DeadlineConfig` — stragglers
+            attempt the round (full participant energy) but their updates
+            miss the merge and leave their AoI unreset.
     """
-    from repro.federated.campaign import CHURN_STREAM, MASK_STREAM
+    from repro.federated.campaign import (CHURN_STREAM, DEADLINE_STREAM,
+                                          MASK_STREAM)
 
     n = fl.n_clients
     p_vec = jnp.asarray(p)
@@ -278,18 +288,20 @@ def run_heterogeneous_reference(
         present = jnp.asarray(present0, bool)
     else:
         present = jnp.ones((n,), bool)
+    miss = deadline.as_arrays(1, n)[0] if deadline is not None else None
 
     @jax.jit
-    def round_fn(params, round_idx, rng, present):
+    def round_fn(params, round_idx, rng, present, late):
         mask = jax.random.bernoulli(rng, p_vec, (n,)) & present
+        delivered = mask & ~late
         batches = jax.vmap(
             lambda cid: client_data(cid, round_idx, fl.batch_per_client,
                                     fl.local_steps))(jnp.arange(n))
         client_params, _ = jax.vmap(
             lambda pp, bb: local_train(loss_fn, pp, bb, opt),
             in_axes=(None, 0))(params, batches)
-        merged = fedavg_merge(params, client_params, mask)
-        return merged, mask, eval_fn(merged, val_batch)
+        merged = fedavg_merge(params, client_params, delivered)
+        return merged, mask, delivered, eval_fn(merged, val_batch)
 
     @jax.jit
     def churn_fn(rng, present):
@@ -302,6 +314,8 @@ def run_heterogeneous_reference(
     aoi = AoITracker.create(n)
     tracker = ConvergenceTracker.create(fl.target_acc, fl.consecutive)
     present_counts = jnp.zeros((n,), jnp.int64)
+    straggler_counts = jnp.zeros((n,), jnp.int64)
+    no_late = jnp.zeros((n,), bool)
     accs: list[float] = []
     t0 = time.time()
     rounds_done = fl.max_rounds
@@ -310,10 +324,19 @@ def run_heterogeneous_reference(
             present = churn_fn(
                 jax.random.fold_in(key, CHURN_STREAM + r), present)
             present_counts = present_counts + jnp.asarray(present, jnp.int64)
+        if deadline is not None:
+            late = jax.random.bernoulli(
+                jax.random.fold_in(key, DEADLINE_STREAM + r), miss, (n,))
+        else:
+            late = no_late
         rng = jax.random.fold_in(key, MASK_STREAM + r)
-        params, mask, acc = round_fn(params, jnp.asarray(r), rng, present)
+        params, mask, delivered, acc = round_fn(
+            params, jnp.asarray(r), rng, present, late)
+        # attempts are charged; only delivered updates reset AoI
         ledger = ledger.record_round_j(mask, e_part, e_idle)
-        aoi = aoi.update(mask, present if churn is not None else None)
+        aoi = aoi.update(delivered, present if churn is not None else None)
+        straggler_counts = straggler_counts + jnp.asarray(
+            mask & late, jnp.int64)
         tracker = tracker.update(acc, jnp.asarray(r, jnp.int32))
         accs.append(float(acc))
         if bool(tracker.converged):
@@ -329,5 +352,6 @@ def run_heterogeneous_reference(
         aoi=aoi,
         present_counts=present_counts,
         present_final=present,
+        straggler_counts=straggler_counts,
         wall_s=time.time() - t0,
     )

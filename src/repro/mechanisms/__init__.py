@@ -16,6 +16,10 @@ subsystem closes that gap constructively:
 * :mod:`repro.mechanisms.heterogeneous` — smallest *uniform* γ* hitting a
   PoA target for a **heterogeneous** cost vector, on the batched
   asymmetric-NE engine (:mod:`repro.core.asymmetric_batched`).
+* :mod:`repro.mechanisms.coalition` — coalition formation as a
+  *structural* mechanism: certified partition equilibria
+  (:mod:`repro.core.coalition`) benchmarked against the grand-coalition
+  NE and the coalition-structured planner.
 """
 import repro.core  # noqa: F401  (enables x64 before any game math)
 
@@ -44,4 +48,8 @@ from repro.mechanisms.stackelberg import (  # noqa: E402,F401
 from repro.mechanisms.heterogeneous import (  # noqa: E402,F401
     HeterogeneousCalibration,
     calibrate_gamma_heterogeneous,
+)
+from repro.mechanisms.coalition import (  # noqa: E402,F401
+    CoalitionReport,
+    coalition_report,
 )

@@ -1,0 +1,126 @@
+"""Coalition formation as a mechanism: does splitting the fleet help?
+
+The paper's mechanisms (AoI rewards, Stackelberg pricing) change the
+*utilities* of one big game. Coalition formation changes the *structure*
+instead: the operator fixes a number of pooled FedAvg groups (and
+optionally a per-group cap) and lets nodes sort themselves — each
+coalition trains its own model with its members' participation at the
+coalition-internal heterogeneous NE, and nodes switch groups while any
+unilateral switch is profitable (:mod:`repro.core.coalition`).
+
+:func:`coalition_report` evaluates that design point: it solves and
+certifies the partition equilibrium, benchmarks it against the
+coalition-structured planner (partition PoA), and against the *grand
+coalition* — the existing single-game heterogeneous NE — so the
+"formation gain" (grand-coalition social cost minus partition social
+cost) directly answers whether the structural mechanism beats the status
+quo for a given fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asymmetric_batched import (social_cost_batched,
+                                           solve_heterogeneous)
+from repro.core.coalition import PartitionPoA, partition_poa_report
+from repro.core.duration import DurationModel
+
+__all__ = ["CoalitionReport", "coalition_report"]
+
+
+@dataclasses.dataclass
+class CoalitionReport:
+    """Batched evaluation of a coalition-formation design point.
+
+    Attributes:
+        partition: the :class:`~repro.core.coalition.PartitionPoA` bundle
+            (equilibrium partition, certification, planner benchmark).
+        certified: ``(B,)`` bool — no node can gain more than ``cert_tol``
+            by any in-coalition deviation or coalition switch.
+        grand_p: ``(B, N)`` heterogeneous NE of the one-group game (the
+            status-quo baseline every mechanism in this package competes
+            against).
+        grand_cost: ``(B,)`` social cost of that grand-coalition NE.
+        formation_gain: ``(B,)`` ``grand_cost - partition.ne_cost`` —
+            positive when letting the fleet split into coalitions lowers
+            social cost versus keeping one big federation.
+    """
+
+    partition: PartitionPoA
+    certified: jax.Array
+    grand_p: jax.Array
+    grand_cost: jax.Array
+    formation_gain: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.partition.batch
+
+    def summary(self, i: int = 0) -> dict:
+        """Scalar diagnostics for scenario ``i``."""
+        return {
+            "n_coalitions": int(self.partition.solution.n_coalitions),
+            "sizes": [int(s) for s in self.partition.solution.sizes[i]],
+            "certified": bool(self.certified[i]),
+            "max_deviation": float(self.partition.deviation[i]),
+            "ne_cost": float(self.partition.ne_cost[i]),
+            "opt_cost": float(self.partition.opt_cost[i]),
+            "poa": float(self.partition.poa[i]),
+            "grand_cost": float(self.grand_cost[i]),
+            "formation_gain": float(self.formation_gain[i]),
+        }
+
+
+def coalition_report(
+    costs: jax.Array,
+    gammas: jax.Array,
+    dur: DurationModel | jax.Array,
+    *,
+    n_coalitions: int,
+    cap: jax.Array | int | None = None,
+    cert_tol: float = 1e-6,
+    verify_grid: int = 64,
+    planner_rounds: int = 20,
+    **solver_kwargs,
+) -> CoalitionReport:
+    """Solve, certify, and benchmark a batch of coalition-formation games.
+
+    Args:
+        costs / gammas: per-node ``(B, N)`` (or broadcastable) game
+            parameters, as for
+            :func:`repro.core.coalition.solve_partition`.
+        dur: shared :class:`~repro.core.duration.DurationModel` (or a raw
+            duration table).
+        n_coalitions: number of coalition slots M (static).
+        cap: per-coalition membership cap (scalar or ``(B,)``).
+        cert_tol: certification bar on the verified max profitable
+            deviation/switch gain.
+        verify_grid / planner_rounds / solver_kwargs: forwarded to
+            :func:`repro.core.coalition.partition_poa_report` (tighten the
+            inner ``tol`` when certifying against a small ``cert_tol`` —
+            the within-coalition deviation bound tracks the inner solver
+            tolerance).
+
+    Returns:
+        A :class:`CoalitionReport`.
+    """
+    rep = partition_poa_report(costs, gammas, dur,
+                               n_coalitions=n_coalitions, cap=cap,
+                               verify_grid=verify_grid,
+                               planner_rounds=planner_rounds,
+                               **solver_kwargs)
+    inner_kw = {k: solver_kwargs[k] for k in ("damping", "max_iters", "tol")
+                if k in solver_kwargs}
+    grand = solve_heterogeneous(rep.solution.costs, rep.solution.gammas,
+                                dur, **inner_kw)
+    grand_cost = social_cost_batched(rep.solution.costs, dur, grand.p)
+    return CoalitionReport(
+        partition=rep,
+        certified=rep.deviation <= cert_tol,
+        grand_p=grand.p,
+        grand_cost=grand_cost,
+        formation_gain=grand_cost - rep.ne_cost,
+    )

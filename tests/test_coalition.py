@@ -1,0 +1,141 @@
+"""Coalition-formation engine: deterministic pins.
+
+Grand-coalition bitwise reduction, partition invariants (disjoint cover,
+caps, certification), planner/PoA consistency, the controller's
+``mode="coalition"`` dispatch, and the mechanism-layer report. Random-game
+properties (engine == Python oracle, monotonicities) live in
+``tests/test_property_coalition.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.asymmetric_batched import (social_cost_batched,
+                                           solve_heterogeneous)
+from repro.core.coalition import (partition_planner_batched,
+                                  partition_poa_report,
+                                  partition_social_cost_batched,
+                                  solve_partition, verify_partition_batched)
+from repro.core.controller import ParticipationController
+from repro.mechanisms import coalition_report
+
+N = 6
+B = 3
+
+
+@pytest.fixture(scope="module")
+def dur():
+    return C.theoretical_duration(n_nodes=N, d_inf=35.0, slope=8.0)
+
+
+@pytest.fixture(scope="module")
+def games():
+    rng = np.random.default_rng(7)
+    costs = jnp.asarray(rng.uniform(0.5, 8.0, (B, N)))
+    gammas = jnp.asarray(rng.uniform(0.2, 1.2, (B, N)))
+    return costs, gammas
+
+
+def test_grand_coalition_reduces_bitwise(dur, games):
+    """M = 1 partition solves == the unmasked heterogeneous engine bitwise:
+    the p = 0 mask pin is a convolution identity, so every Gauss-Seidel
+    intermediate is instruction- and value-identical."""
+    costs, gammas = games
+    sol = solve_partition(costs, gammas, dur, n_coalitions=1)
+    het = solve_heterogeneous(costs, gammas, dur)
+    np.testing.assert_array_equal(np.asarray(sol.p), np.asarray(het.p))
+    np.testing.assert_array_equal(np.asarray(sol.assign), 0)
+    np.testing.assert_array_equal(np.asarray(sol.switches), 0)
+    assert bool(jnp.all(sol.converged))
+
+
+def test_partition_invariants(dur, games):
+    """Partitions are a disjoint cover, probabilities live in [P_MIN, 1],
+    caps hold, and converged scenarios certify ≤ the tolerance budget."""
+    costs, gammas = games
+    cap = 4
+    sol = solve_partition(costs, gammas, dur, n_coalitions=2, cap=cap,
+                          tol=1e-10)
+    assert sol.assign.shape == (B, N)
+    a = np.asarray(sol.assign)
+    assert np.all((a >= 0) & (a < 2))
+    sizes = np.asarray(sol.sizes)
+    np.testing.assert_array_equal(sizes.sum(axis=1), N)
+    assert np.all(sizes <= cap)
+    p = np.asarray(sol.p)
+    assert np.all((p > 0.0) & (p <= 1.0))  # every node plays in its group
+    assert bool(jnp.all(sol.converged)) and bool(jnp.all(sol.inner_converged))
+    assert float(jnp.max(sol.max_gain)) <= 1e-6
+
+    dev = verify_partition_batched(costs, gammas, dur, sol.assign, sol.p,
+                                   n_coalitions=2, cap=cap, tol=1e-10)
+    assert float(jnp.max(dev)) <= 1e-6
+
+
+def test_grand_coalition_social_cost_matches_asymmetric(dur, games):
+    """With one coalition the partition social cost is the asymmetric
+    layer's N·E[D] + Σ c_i p_i."""
+    costs, gammas = games
+    sol = solve_partition(costs, gammas, dur, n_coalitions=1)
+    got = partition_social_cost_batched(costs, dur, sol.assign, sol.p,
+                                        n_coalitions=1)
+    want = social_cost_batched(costs, dur, sol.p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_planner_descends_and_poa_at_least_one(dur, games):
+    costs, gammas = games
+    rep = partition_poa_report(costs, gammas, dur, n_coalitions=2, tol=1e-10)
+    opt_direct = partition_planner_batched(
+        costs, dur, rep.solution.assign, rep.solution.p, n_coalitions=2)
+    np.testing.assert_array_equal(np.asarray(rep.opt_p),
+                                  np.asarray(opt_direct))
+    assert bool(jnp.all(rep.opt_cost <= rep.ne_cost + 1e-9))
+    assert bool(jnp.all(rep.poa >= 1.0 - 1e-12))
+    assert float(jnp.max(rep.deviation)) <= 1e-6
+
+
+def test_cap_binds_switch_dynamics(dur, games):
+    """cap = 1 with a singleton start freezes the partition: every other
+    coalition is full, so no switch is eligible — 0 switches, stable."""
+    costs, gammas = games
+    sol = solve_partition(costs, gammas, dur, n_coalitions=N, cap=1,
+                          assign0=jnp.arange(N, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(sol.assign),
+                                  np.broadcast_to(np.arange(N), (B, N)))
+    np.testing.assert_array_equal(np.asarray(sol.switches), 0)
+    assert bool(jnp.all(sol.converged))
+
+
+def test_controller_coalition_mode(dur, games):
+    costs, gammas = games
+    ctrl = ParticipationController(n_nodes=N, mode="coalition",
+                                   n_coalitions=2, duration_model=dur)
+    p = ctrl.solve_batched(gammas, costs)
+    sol = solve_partition(costs, gammas, dur, n_coalitions=2)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(sol.p))
+    # scalar configs are spread across the fleet
+    p_scalar = ctrl.solve_batched(gammas=0.5, costs=3.0)
+    assert p_scalar.shape == (1, N)
+    with pytest.raises(ValueError, match="per-node partition"):
+        ctrl.participation_probability()
+    assert ctrl.diagnostics()["p"] is None
+    with pytest.raises(ValueError, match="n_coalitions"):
+        ParticipationController(n_nodes=N, n_coalitions=0,
+                                duration_model=dur)
+
+
+def test_coalition_report_benchmarks_grand_coalition(dur, games):
+    costs, gammas = games
+    rep = coalition_report(costs, gammas, dur, n_coalitions=2, tol=1e-10)
+    assert bool(jnp.all(rep.certified))
+    grand_cost = social_cost_batched(costs, dur, rep.grand_p)
+    np.testing.assert_allclose(np.asarray(rep.grand_cost),
+                               np.asarray(grand_cost), rtol=1e-12)
+    np.testing.assert_allclose(
+        np.asarray(rep.formation_gain),
+        np.asarray(rep.grand_cost - rep.partition.ne_cost), rtol=1e-12)
+    s = rep.summary(0)
+    assert s["certified"] and s["poa"] >= 1.0
+    assert sum(s["sizes"]) == N

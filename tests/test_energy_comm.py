@@ -1,4 +1,6 @@
 """Energy model (eqs. 1-7), 802.11ax airtime, AoI (eq. 10)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,10 +8,12 @@ import pytest
 
 import repro.core  # noqa: F401
 from repro.core.aoi import expected_aoi, simulate_aoi
-from repro.core.comm80211ax import PAPER_COMM, airtime_model
+from repro.core.comm80211ax import (PAPER_COMM, airtime_model,
+                                    airtime_model_batched)
 from repro.core.energy import (EnergyLedger, EnergyParams, PAPER_MODEL_BYTES,
-                               calibrate_from_table, expected_round_energy,
-                               round_energy, task_energy)
+                               calibrate_from_table, channel_energy_rates,
+                               expected_round_energy, round_energy,
+                               task_energy)
 
 
 def test_airtime_scales_with_payload():
@@ -163,6 +167,90 @@ def test_ledger_works_as_scan_carry():
     for a, b in zip(jax.tree.leaves(rebuilt), jax.tree.leaves(scanned)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert float(rebuilt.total_wh) == float(scanned.total_wh)
+
+
+# --- batched airtime vs the scalar oracle ---------------------------------
+
+# MCS ladder (BPSK 1/2 → 1024-QAM 5/6 → the paper's 10-bit default) ×
+# payloads hitting every A-MPDU fragmentation branch: empty, sub-symbol,
+# sub-A-MPDU, one-bit-under, *exact* multiples (rem == 0 — the float divmod
+# remainder trap), just-over, and the paper's ResNet-18 update.
+_MCS_GRID = [1.0, 2.0, 4.0, 25.0 / 3.0, 10.0]
+_MPDU_BYTES = PAPER_COMM.a_mpdu_max_bits / 8.0
+_PAYLOAD_GRID = [0.0, 1.0, 100.0, _MPDU_BYTES - 1, _MPDU_BYTES,
+                 _MPDU_BYTES + 1, 2 * _MPDU_BYTES, PAPER_MODEL_BYTES]
+_AIRTIME_KEYS = ["t_tx_s", "t_data_s", "t_overhead_s", "n_ampdu",
+                 "goodput_mbps", "tx_power_w", "e_tx_wh"]
+
+
+def test_airtime_batched_matches_scalar_oracle_elementwise():
+    """airtime_model_batched == the verbatim scalar oracle, ≤ 1e-12 rel,
+    on the full MCS × payload grid evaluated as one batched call."""
+    for mcs in _MCS_GRID:
+        params = dataclasses.replace(PAPER_COMM, bits_per_symbol_per_sc=mcs)
+        batched = airtime_model_batched(
+            jnp.asarray(_PAYLOAD_GRID), jnp.asarray(mcs))
+        for j, payload in enumerate(_PAYLOAD_GRID):
+            ref = airtime_model(payload, params)
+            for k in _AIRTIME_KEYS:
+                got = batched[k] if k == "tx_power_w" else float(batched[k][j])
+                assert got == pytest.approx(ref[k], rel=1e-12, abs=1e-300), (
+                    mcs, payload, k)
+
+
+def test_airtime_batched_zero_payload_edge():
+    """payload_bytes = 0: no data symbols, one (empty) TXOP of overhead,
+    zero goodput — and no NaN/Inf anywhere (the guarded divisions)."""
+    out = airtime_model_batched(jnp.asarray([0.0]))
+    assert float(out["t_data_s"][0]) == 0.0
+    assert float(out["n_ampdu"][0]) == 1.0
+    assert float(out["t_overhead_s"][0]) > 0.0
+    assert float(out["goodput_mbps"][0]) == 0.0
+    for k in ("t_tx_s", "t_data_s", "goodput_mbps", "e_tx_wh"):
+        assert np.isfinite(np.asarray(out[k])).all(), k
+
+
+def test_airtime_batched_exact_ampdu_multiple_has_no_ghost_frame():
+    """At an exact A-MPDU multiple the remainder path must contribute
+    nothing: the where-gated remainder frame would otherwise still charge
+    a MAC-header symbol for a zero-bit fragment."""
+    one = airtime_model_batched(jnp.asarray([_MPDU_BYTES]))
+    two = airtime_model_batched(jnp.asarray([2 * _MPDU_BYTES]))
+    assert float(two["t_data_s"][0]) == pytest.approx(
+        2 * float(one["t_data_s"][0]), rel=1e-12)
+    assert float(two["n_ampdu"][0]) == 2.0
+
+
+def test_airtime_batched_broadcasts_and_jits():
+    """(N,) MCS × scalar payload broadcasts; the whole model is jittable
+    and per-node airtimes decrease with link quality."""
+    mcs = jnp.asarray([1.0, 2.0, 4.0, 25.0 / 3.0, 10.0])
+    fn = jax.jit(lambda b: airtime_model_batched(PAPER_MODEL_BYTES, b))
+    out = fn(mcs)
+    t = np.asarray(out["t_tx_s"])
+    assert t.shape == (5,)
+    assert np.all(np.diff(t) < 0)  # better MCS → shorter airtime
+
+
+def test_channel_energy_rates_uniform_reduces_to_scalar():
+    """A uniform-MCS channel map reproduces the scalar EnergyParams rates
+    bitwise — the seam the campaign-level reduction pin rests on."""
+    ep = EnergyParams()
+    e_part, e_idle = channel_energy_rates(
+        jnp.full((7,), ep.comm.bits_per_symbol_per_sc), ep)
+    np.testing.assert_array_equal(np.asarray(e_part),
+                                  np.full(7, ep.e_participant_j))
+    np.testing.assert_array_equal(np.asarray(e_idle),
+                                  np.full(7, ep.e_idle_j))
+
+
+def test_channel_energy_rates_worse_channel_costs_more():
+    ep = EnergyParams()
+    e_part, e_idle = channel_energy_rates(jnp.asarray([1.0, 4.0, 10.0]), ep)
+    assert np.all(np.diff(np.asarray(e_part)) < 0)
+    np.testing.assert_array_equal(np.asarray(e_idle),
+                                  np.full(3, ep.e_idle_j))
+    assert np.all(np.asarray(e_part) > np.asarray(e_idle))
 
 
 def test_aoi_closed_form():

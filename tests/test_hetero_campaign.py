@@ -1,6 +1,6 @@
 """Heterogeneous-fleet campaign engine: oracle equivalence, symmetric
-reduction, churn accounting invariants, and the controller's heterogeneous
-batched front end."""
+reduction, churn accounting invariants, channel-rate / deadline reductions,
+and the controller's heterogeneous batched front end."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,8 +11,10 @@ from repro.core.asymmetric_batched import (social_cost_batched,
                                            verify_equilibrium_batched)
 from repro.core.controller import ParticipationController
 from repro.core.duration import theoretical_duration
-from repro.core.energy import EnergyParams, per_node_energy_rates
-from repro.federated.campaign import ChurnConfig, run_campaigns
+from repro.core.energy import (EnergyParams, channel_energy_rates,
+                               per_node_energy_rates)
+from repro.federated.campaign import (ChurnConfig, DeadlineConfig,
+                                      run_campaigns)
 from repro.federated.simulation import (FLConfig,
                                         run_heterogeneous_reference)
 from repro.federated.tasks import synthetic_mlp_task
@@ -154,6 +156,106 @@ def test_churn_accounting_invariants(task):
     want = (counts * ep.e_participant_j
             + (rounds - counts) * ep.e_idle_j)
     np.testing.assert_allclose(per_node_j, want)
+
+
+def test_uniform_mcs_channel_rates_reduce_bitwise(task):
+    """A campaign metered at channel-derived per-node rates with a
+    *uniform* MCS map equals the constant-rate campaign bitwise — the
+    channel-energy seam is a pure generalization."""
+    fl = _fl(seed=0, max_rounds=10)
+    opt = sgd(0.1)
+    ps = jnp.asarray([0.3, 0.7], jnp.float32)
+    ep = EnergyParams()
+    base = run_campaigns(fl, *task.campaign_args(), opt, ps, energy=ep)
+
+    e_part, e_idle = channel_energy_rates(
+        jnp.full((N,), ep.comm.bits_per_symbol_per_sc), ep)
+    rated = run_campaigns(fl, *task.campaign_args(), opt, ps,
+                          energy_rates_j=(e_part[None, :], e_idle[None, :]))
+    np.testing.assert_array_equal(np.asarray(base.ledger.per_node_j),
+                                  np.asarray(rated.ledger.per_node_j))
+    np.testing.assert_array_equal(np.asarray(base.acc_history),
+                                  np.asarray(rated.acc_history))
+    np.testing.assert_array_equal(np.asarray(base.rounds),
+                                  np.asarray(rated.rounds))
+
+    # a genuinely heterogeneous channel map changes only the metering:
+    # masks/accuracies are untouched, energy shifts toward the weak links
+    e2_part, e2_idle = channel_energy_rates(
+        jnp.asarray(np.linspace(1.0, 10.0, N)), ep)
+    skewed = run_campaigns(fl, *task.campaign_args(), opt, ps,
+                           energy_rates_j=(e2_part[None, :],
+                                           e2_idle[None, :]))
+    np.testing.assert_array_equal(np.asarray(base.acc_history),
+                                  np.asarray(skewed.acc_history))
+    np.testing.assert_array_equal(
+        np.asarray(base.ledger.participation_counts),
+        np.asarray(skewed.ledger.participation_counts))
+    assert float(jnp.sum(skewed.ledger.per_node_j)) > 0.0
+
+
+def test_deadline_miss_zero_reduces_bitwise(task):
+    """miss = 0 deadline config == the deadline-free engine bitwise
+    (masks, ledger, AoI, accuracies), with all-zero straggler counts."""
+    fl = _fl(seed=0, max_rounds=10)
+    opt = sgd(0.1)
+    ps = jnp.asarray([0.3, 0.7], jnp.float32)
+    base = run_campaigns(fl, *task.campaign_args(), opt, ps)
+    dead = run_campaigns(fl, *task.campaign_args(), opt, ps,
+                         deadline=DeadlineConfig(miss=0.0))
+    np.testing.assert_array_equal(np.asarray(base.ledger.per_node_j),
+                                  np.asarray(dead.ledger.per_node_j))
+    np.testing.assert_array_equal(
+        np.asarray(base.ledger.participation_counts),
+        np.asarray(dead.ledger.participation_counts))
+    np.testing.assert_array_equal(np.asarray(base.acc_history),
+                                  np.asarray(dead.acc_history))
+    np.testing.assert_array_equal(np.asarray(base.aoi.cum_age),
+                                  np.asarray(dead.aoi.cum_age))
+    np.testing.assert_array_equal(np.asarray(base.rounds),
+                                  np.asarray(dead.rounds))
+    np.testing.assert_array_equal(np.asarray(dead.straggler_counts), 0)
+    # and the deadline-free result reports zero stragglers by construction
+    np.testing.assert_array_equal(np.asarray(base.straggler_counts), 0)
+
+
+def test_deadline_engine_matches_reference(task):
+    """Straggler model engine == Python oracle on shared RNG streams:
+    bitwise ledgers (attempts charged), AoI (delivered-only resets),
+    straggler counts, with churn active simultaneously."""
+    fl = _fl(max_rounds=10, target_acc=1.01)  # never converges
+    opt = sgd(0.1)
+    p_vec, e_part, e_idle = _per_node_setup()
+    churn = ChurnConfig(arrival=0.3, departure=0.25)
+    dead = DeadlineConfig(miss=jnp.asarray(np.linspace(0.0, 0.6, N)))
+
+    res = run_campaigns(fl, *task.campaign_args(), opt, p_vec[None, :],
+                        energy_rates_j=(e_part[None, :], e_idle[None, :]),
+                        churn=churn, deadline=dead)
+    ref = run_heterogeneous_reference(fl, *task.campaign_args(), opt, p_vec,
+                                      energy_rates_j=(e_part, e_idle),
+                                      churn=churn, deadline=dead)
+    assert int(res.rounds[0]) == ref.rounds
+    np.testing.assert_array_equal(np.asarray(res.ledger.per_node_j[0]),
+                                  np.asarray(ref.ledger.per_node_j))
+    np.testing.assert_array_equal(
+        np.asarray(res.ledger.participation_counts[0]),
+        np.asarray(ref.ledger.participation_counts))
+    np.testing.assert_array_equal(np.asarray(res.aoi.cum_age[0]),
+                                  np.asarray(ref.aoi.cum_age))
+    np.testing.assert_array_equal(np.asarray(res.aoi.tracked[0]),
+                                  np.asarray(ref.aoi.tracked))
+    np.testing.assert_array_equal(np.asarray(res.straggler_counts[0]),
+                                  np.asarray(ref.straggler_counts))
+    np.testing.assert_allclose(np.asarray(res.acc_history[0][:ref.rounds]),
+                               np.asarray(ref.acc_history),
+                               rtol=1e-9, atol=1e-12)
+    # node 0 has miss=0: it can never straggle; ledger participation counts
+    # include straggler attempts (they trained and transmitted)
+    assert int(res.straggler_counts[0][0]) == 0
+    counts = np.asarray(res.ledger.participation_counts[0])
+    stragglers = np.asarray(res.straggler_counts[0])
+    assert np.all(stragglers <= counts)
 
 
 def test_run_campaigns_rate_validation(task):
